@@ -1,0 +1,70 @@
+"""BIP vs Expert-Choice — two drop-free balancing philosophies, quantified.
+
+Expert-Choice gets MaxVio == 0 for free but pays in token coverage and
+objective mass, and cannot serve autoregressive decode. BIP keeps the
+token-choice contract (every token gets exactly k experts, decode-safe)
+with MaxVio ~= 0.05-0.3. This benchmark puts numbers on that trade over
+skewed score streams, including the LP upper bound from the scipy oracle.
+
+    PYTHONPATH=src python -m benchmarks.expert_choice_compare
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balance_metrics, bip_route_reference
+from repro.core.expert_choice import expert_choice_route
+from repro.core.lp_oracle import routing_objective, solve_plp
+
+
+def run(n: int = 256, m: int = 8, k: int = 2, skew: float = 1.5, seeds=(0, 1, 2)):
+    rows = []
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        logits = rng.standard_normal((n, m)) + skew * np.linspace(2, -2, m)[None, :]
+        e = np.exp(logits - logits.max(-1, keepdims=True))
+        s = jnp.asarray((e / e.sum(-1, keepdims=True)).astype(np.float32))
+
+        _, lp_opt = solve_plp(np.asarray(s), k)
+
+        _, idx, _ = bip_route_reference(s, jnp.zeros((m,)), top_k=k, n_iters=8)
+        bip_obj = routing_objective(np.asarray(s), np.asarray(idx))
+        bip_vio = float(balance_metrics(idx, m, k)["max_vio"])
+
+        gates, mets = expert_choice_route(s, k)
+        rows.append({
+            "seed": seed,
+            "lp_opt": lp_opt,
+            "bip_obj_ratio": bip_obj / lp_opt,
+            "bip_max_vio": bip_vio,
+            "ec_obj_ratio": float(mets["objective"]) / lp_opt,
+            "ec_max_vio": 0.0,
+            "ec_coverage_full": float(mets["coverage_full"]),
+            "ec_coverage_zero": float(mets["coverage_zero"]),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    agg = {k: float(np.mean([r[k] for r in rows])) for k in rows[0] if k != "seed"}
+    print(f"{'':<18}{'obj/LP-opt':>12}{'MaxVio':>9}{'full-cov':>10}{'zero-cov':>10}")
+    print(f"{'BIP T=8':<18}{agg['bip_obj_ratio']:>12.3f}{agg['bip_max_vio']:>9.3f}"
+          f"{'1.000':>10}{'0.000':>10}")
+    print(f"{'Expert-Choice':<18}{agg['ec_obj_ratio']:>12.3f}{0.0:>9.3f}"
+          f"{agg['ec_coverage_full']:>10.3f}{agg['ec_coverage_zero']:>10.3f}")
+    print("\nBIP keeps every token at exactly k experts (decode-safe) at the")
+    print("cost of small MaxVio; Expert-Choice zeroes MaxVio but strands")
+    print(f"{agg['ec_coverage_zero']:.1%} of tokens with no expert at all.")
+    return [
+        {"name": "ec_compare_bip", "us_per_call": round(agg["bip_obj_ratio"], 4),
+         "derived": f"obj_ratio;maxvio={agg['bip_max_vio']:.3f}"},
+        {"name": "ec_compare_expert_choice", "us_per_call": round(agg["ec_obj_ratio"], 4),
+         "derived": f"obj_ratio;zero_cov={agg['ec_coverage_zero']:.3f}"},
+    ]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Re-export: the loop-aware HLO cost model lives in repro.launch.hlo_cost."""
+from repro.launch.hlo_cost import Cost, analyze, analyze_compiled, parse_hlo  # noqa: F401

@@ -1,0 +1,159 @@
+"""Paper reproduction — Tables 2/3 (+ per-layer Tables 4/5, Fig 1/2 data).
+
+Trains reduced-scale Minimind-MoE models (same m, k, layer count as the
+paper; smaller d_model/seq so it runs on this CPU container) with the three
+routing strategies and reports AvgMaxVio / SupMaxVio / test perplexity /
+wall-clock — the paper's exact measurement set.
+
+What must reproduce (paper §4.2):
+  * BIP holds MaxVio low from the FIRST batch; LC/LF start high, fall slowly.
+  * AvgMaxVio(BIP) « AvgMaxVio(LF) < AvgMaxVio(LC); SupMaxVio(BIP) < 0.6.
+  * BIP perplexity <= LC/LF perplexity (no conflicting aux gradients).
+  * the gap GROWS from m=16 to m=64 (paper Fig 2 vs Fig 1).
+
+Scale note: the paper's absolute numbers come from 0.3B/1.1B models on a
+Chinese web corpus; with the synthetic corpus + reduced dims the comparison
+is RELATIVE between methods on identical data/seeds, which is what the
+paper's claims assert (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data import make_batches
+from repro.models import build_model
+from repro.training import train_loop
+from repro.training.loop import evaluate_ppl
+
+
+def run_one(
+    base_arch: str,
+    strategy: str,
+    bip_iters: int,
+    *,
+    steps: int,
+    seed: int = 0,
+    d_model: int = 128,
+    n_layers: int = 4,
+    seq_len: int = 128,
+    batch: int = 8,
+) -> Dict:
+    cfg = configs.get(base_arch)
+    routing = dataclasses.replace(
+        cfg.routing, strategy=strategy, bip_iters=bip_iters
+    )
+    cfg = dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=32,
+        moe_d_ff=256,
+        d_ff=256,
+        vocab_size=512,
+        max_seq_len=seq_len,
+        attn_chunk=64,
+        routing=routing,
+    )
+    model = build_model(cfg)
+    train = make_batches(cfg, batch, seq_len, steps, seed=seed, split="train")
+    t0 = time.perf_counter()
+    state, log = train_loop(
+        model, train, lr=1e-3, warmup_steps=10, total_steps=steps,
+        key=jax.random.PRNGKey(seed),
+    )
+    wall = time.perf_counter() - t0
+    test = make_batches(cfg, batch, seq_len, 4, seed=seed, split="test")
+    ppl = evaluate_ppl(model, state, test)
+    s = log.summary()
+    return {
+        "strategy": strategy if strategy != "bip" else f"bip_T{bip_iters}",
+        "AvgMaxVio": round(s["AvgMaxVio"], 4),
+        "SupMaxVio": round(s["SupMaxVio"], 4),
+        "perplexity": round(ppl, 4),
+        "train_wall_s": round(wall, 1),
+        "AvgMaxVio_per_layer": [round(v, 4) for v in s["AvgMaxVio_per_layer"]],
+        "maxvio_trajectory": [
+            round(float(v.max()), 4) for v in log.max_vio_steps
+        ],
+        "first_batch_maxvio": round(float(log.max_vio_steps[0].max()), 4)
+        if log.max_vio_steps
+        else None,
+    }
+
+
+def table(base_arch: str, variants: List, steps: int, tag: str) -> Dict:
+    print(f"\n=== {tag} ({base_arch}, {steps} steps/method) ===", flush=True)
+    rows = []
+    for strategy, t in variants:
+        r = run_one(base_arch, strategy, t, steps=steps)
+        rows.append(r)
+        print(
+            f"{r['strategy']:<16} AvgMaxVio {r['AvgMaxVio']:<8} "
+            f"SupMaxVio {r['SupMaxVio']:<8} ppl {r['perplexity']:<9} "
+            f"wall {r['train_wall_s']}s first-batch {r['first_batch_maxvio']}",
+            flush=True,
+        )
+    return {"table": tag, "arch": base_arch, "rows": rows}
+
+
+def main(steps: int = 150, out: str = "paper_repro_results.json"):
+    results = []
+    # Table 2 analogue: m=16, k=4
+    results.append(
+        table(
+            "minimind_moe_16e",
+            [("aux_loss", 0), ("lossfree", 0), ("bip", 2), ("bip", 4), ("bip", 8)],
+            steps,
+            "table2_m16_k4",
+        )
+    )
+    # Table 3 analogue: m=64, k=8
+    results.append(
+        table(
+            "minimind_moe_64e",
+            [("aux_loss", 0), ("lossfree", 0), ("bip", 4), ("bip", 14)],
+            steps,
+            "table3_m64_k8",
+        )
+    )
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {out}")
+
+    # paper-claim checks (soft: prints PASS/FAIL lines consumed by EXPERIMENTS)
+    for tbl in results:
+        by = {r["strategy"]: r for r in tbl["rows"]}
+        bip_rows = [r for k, r in by.items() if k.startswith("bip")]
+        best_bip = min(bip_rows, key=lambda r: r["AvgMaxVio"])
+        lc, lf = by["aux_loss"], by["lossfree"]
+        checks = {
+            "bip_avgmaxvio_lowest": best_bip["AvgMaxVio"] < min(lc["AvgMaxVio"], lf["AvgMaxVio"]),
+            "bip_supmaxvio_lowest": min(r["SupMaxVio"] for r in bip_rows)
+            < min(lc["SupMaxVio"], lf["SupMaxVio"]),
+            "bip_balanced_from_step1": any(
+                r["first_batch_maxvio"] is not None and r["first_batch_maxvio"] < 0.6
+                for r in bip_rows
+            ),
+            "bip_ppl_competitive": min(r["perplexity"] for r in bip_rows)
+            <= 1.02 * min(lc["perplexity"], lf["perplexity"]),
+        }
+        for name, ok in checks.items():
+            print(f"[{tbl['table']}] {name}: {'PASS' if ok else 'FAIL'}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 150
+    main(steps=steps)

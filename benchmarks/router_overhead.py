@@ -1,0 +1,61 @@
+"""Router overhead — validates the paper's "very small time costs" claim.
+
+Times route() per strategy on CPU at the paper's gate sizes (n tokens ×
+m experts) and reports µs/call plus overhead relative to the vanilla top-k
+gate. On TPU the ADMM update is the Pallas kernel (~0.5 ms/iteration at
+n=32k, m=128, see kernels/bip_admm.py cost model); the CPU numbers here are
+for RELATIVE comparison between strategies only.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RouterConfig, init_router_state, route
+
+
+def _time_call(fn, *args, iters: int = 20) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args).combine_weights)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out.combine_weights)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(n: int = 8192, m: int = 64, k: int = 8) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    rows = []
+    base_us = None
+    for strategy, t in [
+        ("topk", 0), ("aux_loss", 0), ("lossfree", 0),
+        ("bip", 2), ("bip", 4), ("bip", 8), ("bip", 14),
+    ]:
+        cfg = RouterConfig(
+            n_experts=m, top_k=k, strategy=strategy, bip_iters=max(t, 1)
+        )
+        state = init_router_state(cfg)
+        fn = jax.jit(lambda l, s, c=cfg: route(l, s, c))
+        us = _time_call(fn, logits, state)
+        if strategy == "topk":
+            base_us = us
+        name = strategy if strategy != "bip" else f"bip_T{t}"
+        rows.append(
+            {
+                "name": f"router_{name}_n{n}_m{m}",
+                "us_per_call": round(us, 1),
+                "derived": f"overhead_vs_topk={us / base_us:.2f}x",
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

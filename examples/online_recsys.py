@@ -1,0 +1,60 @@
+"""Online ad-slot allocation with Algorithm 3/4 (paper §5 application).
+
+A stream of page views arrives; each must be matched to k=2 of m=8 ad slots,
+maximizing total CTR while capping any slot's share (the (BIP) program with
+experts = slots). Compares greedy CTR-max routing vs the online BIP gate vs
+its O(m·b) histogram approximation.
+
+    PYTHONPATH=src python examples/online_recsys.py
+"""
+import numpy as np
+
+from repro.core import ApproxBIPGate, OnlineBIPGate
+
+
+def ctr_stream(rng, n, m, hot=2.0):
+    """CTR scores where a few 'popular' slots dominate (collapse pressure)."""
+    base = rng.standard_normal((n, m)) * 0.5 + hot * np.linspace(1.5, -1.5, m)
+    e = np.exp(base - base.max(-1, keepdims=True))
+    return e / e.sum(-1, keepdims=True)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, m, k = 4000, 8, 2
+    s = ctr_stream(rng, n, m)
+
+    greedy = np.argsort(-s, axis=-1)[:, :k]
+    g_load = np.bincount(greedy.reshape(-1), minlength=m)
+    g_ctr = np.take_along_axis(s, greedy, -1).sum()
+
+    gate = OnlineBIPGate(n_tokens=n, n_experts=m, top_k=k, n_iters=2)
+    approx = ApproxBIPGate(n_tokens=n, n_experts=m, top_k=k, n_bins=128, n_iters=2)
+    picks_e, picks_a, ctr_e, ctr_a = [], [], 0.0, 0.0
+    for i in range(n):
+        idx, gains = gate.route(s[i])
+        picks_e.append(idx)
+        ctr_e += gains.sum()
+        idx, gains = approx.route(s[i])
+        picks_a.append(idx)
+        ctr_a += gains.sum()
+    e_load = np.bincount(np.concatenate(picks_e), minlength=m)
+    a_load = np.bincount(np.concatenate(picks_a), minlength=m)
+
+    mean = n * k / m
+    print(f"{'policy':<22}{'total CTR':>10}{'CTR vs greedy':>15}{'MaxVio':>8}  load")
+    for name, ctr, load in [
+        ("greedy top-k", g_ctr, g_load),
+        ("online BIP (Alg 3)", ctr_e, e_load),
+        ("histogram BIP (Alg 4)", ctr_a, a_load),
+    ]:
+        print(
+            f"{name:<22}{ctr:>10.1f}{ctr / g_ctr:>14.1%}"
+            f"{load.max() / mean - 1:>8.2f}  {load}"
+        )
+    print("\nBIP trades a few % of CTR for near-uniform slot usage — the")
+    print("multi-slot online matching guarantee from paper §5.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: build a small BIP-routed MoE, train 30 steps, watch balance.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+
+from repro import configs
+from repro.data import make_batches
+from repro.models import build_model
+from repro.training import train_loop
+
+
+def main():
+    # the paper's 16-expert model at toy scale (same m=16, k=4 routing)
+    cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=512)
+    print(f"arch={cfg.name} m={cfg.routing.n_experts} k={cfg.routing.top_k} "
+          f"strategy={cfg.routing.strategy} T={cfg.routing.bip_iters}")
+
+    model = build_model(cfg)
+    batches = make_batches(cfg, batch_size=8, seq_len=64, n_batches=30)
+    state, log = train_loop(model, batches, lr=1e-3, total_steps=30, log_every=5)
+
+    s = log.summary()
+    print("\nBalance over the whole run (the paper's metrics):")
+    print(f"  AvgMaxVio = {s['AvgMaxVio']:.4f}   (paper BIP: ~0.05)")
+    print(f"  SupMaxVio = {s['SupMaxVio']:.4f}   (paper BIP: <0.21)")
+    print(f"  first-batch MaxVio = {log.max_vio_steps[0].max():.4f} "
+          f"<- balanced from step 1, the headline claim")
+    print(f"  final ppl = {s['final_ppl']:.2f}")
+
+    # swap in the Loss-Controlled baseline to see the difference
+    cfg_lc = dataclasses.replace(
+        cfg, routing=dataclasses.replace(cfg.routing, strategy="aux_loss")
+    )
+    model_lc = build_model(cfg_lc)
+    batches = make_batches(cfg_lc, batch_size=8, seq_len=64, n_batches=30)
+    _, log_lc = train_loop(model_lc, batches, lr=1e-3, total_steps=30)
+    print(f"\nLoss-Controlled for comparison: AvgMaxVio = "
+          f"{log_lc.summary()['AvgMaxVio']:.4f}, first batch "
+          f"{log_lc.max_vio_steps[0].max():.4f}")
+
+
+if __name__ == "__main__":
+    main()

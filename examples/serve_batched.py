@@ -1,0 +1,62 @@
+"""Batched serving with a KV cache: prefill 8 prompts, decode 32 tokens each.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch minimind_moe_16e]
+
+Routing stays active at decode time — with expert parallelism, serving
+utilization also depends on balanced expert loads, and the BIP gate keeps
+balancing per decode batch (its dual vector q warm-starts from training).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minimind_moe_16e")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = configs.reduced_for_smoke(args.arch, vocab_size=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.frontend_tokens, cfg.frontend_dim)),
+            jnp.float32,
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.enc_seq_len, cfg.frontend_dim)),
+            jnp.float32,
+        )
+
+    eng = ServeEngine(model, params, max_seq_len=args.prompt_len + args.gen + 1)
+    cache, states = eng.start(batch)
+    logits, cache, states = eng.prefill(prompts, cache, states)
+    toks, cache, states = eng.decode(
+        logits, cache, states, args.gen, temperature=0.8, key=jax.random.PRNGKey(1)
+    )
+    print(f"arch={cfg.name} ({cfg.family}), batch={args.batch}")
+    for i in range(min(4, args.batch)):
+        print(f"  seq {i}: prompt={np.asarray(prompts[i])[:8]}... "
+              f"generated={np.asarray(toks[i])[:16]}...")
+    print(f"generated {toks.shape[0] * toks.shape[1]} tokens total")
+
+
+if __name__ == "__main__":
+    main()

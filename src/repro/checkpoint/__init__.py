@@ -1,0 +1,4 @@
+"""repro.checkpoint — pytree <-> npz persistence."""
+from repro.checkpoint.store import load_pytree, save_pytree, latest_step, CheckpointManager
+
+__all__ = ["CheckpointManager", "latest_step", "load_pytree", "save_pytree"]

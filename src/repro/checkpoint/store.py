@@ -1,0 +1,174 @@
+"""Checkpointing: flatten a pytree to an .npz with path-encoded keys.
+
+Design notes for the production mesh: arrays are fetched with
+jax.device_get, which gathers sharded arrays to host — fine for the model
+sizes we *train* here. The format keeps dtype (incl. bfloat16 via a view
+trick) and the exact tree structure, so save->load roundtrips through jit
+boundaries and across strategy changes (router state q is a plain leaf).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{_SEP}d:{k}" if prefix else f"d:{k}"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}{tag}:{i}" if prefix else f"{tag}:{i}"))
+    elif tree is None:
+        out[prefix or "root"] = None  # marked via meta dtype 'NoneType'
+    else:
+        out[prefix or "root"] = tree
+    return out
+
+
+def _set_path(root, parts, value):
+    node = root
+    for i, (tag, key) in enumerate(parts[:-1]):
+        nxt_tag, nxt_key = parts[i + 1]
+        container = node.setdefault if isinstance(node, dict) else None
+        k = key if tag == "d" else int(key)
+        default = {} if nxt_tag == "d" else []
+        if isinstance(node, dict):
+            node = node.setdefault(k, default)
+        else:
+            while len(node) <= k:
+                node.append(None)
+            if node[k] is None:
+                node[k] = default
+            node = node[k]
+    tag, key = parts[-1]
+    k = key if tag == "d" else int(key)
+    if tag == "n":
+        value = None
+    if isinstance(node, dict):
+        node[k] = value
+    else:
+        while len(node) <= k:
+            node.append(None)
+        node[k] = value
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    arrays, meta = {}, {}
+    for i, (key, val) in enumerate(flat.items()):
+        name = f"a{i}"
+        if val is None:
+            arrays[name] = np.zeros((0,), np.int8)
+            meta[name] = {"path": key, "dtype": "NoneType"}
+            continue
+        arr = np.asarray(val)
+        if arr.dtype == jnp.bfloat16:
+            arrays[name] = arr.view(np.uint16)
+            meta[name] = {"path": key, "dtype": "bfloat16"}
+        else:
+            arrays[name] = arr
+            meta[name] = {"path": key, "dtype": str(arr.dtype)}
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8
+    )
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str) -> Any:
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+        root: Dict = {}
+        items = []
+        for name, info in meta.items():
+            if info["dtype"] == "NoneType":
+                items.append((info["path"], None))
+                continue
+            arr = z[name]
+            if info["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            items.append((info["path"], arr))
+    # rebuild: parse path segments "tag:key"
+    tree: Any = None
+    parsed = []
+    for key, arr in items:
+        parts = [tuple(seg.split(":", 1)) for seg in key.split(_SEP)]
+        parsed.append((parts, arr))
+    # root container type from first segment
+    first_tag = parsed[0][0][0][0]
+    tree = {} if first_tag == "d" else []
+    for parts, arr in parsed:
+        _set_path(tree, parts, arr)
+    # convert list-tagged nodes back to tuples where tagged 't'
+    return _fix_tuples(tree, parsed)
+
+
+def _fix_tuples(tree, parsed):
+    # collect which paths are tuples
+    tuple_paths = set()
+    for parts, _ in parsed:
+        for i, (tag, _key) in enumerate(parts):
+            if tag == "t":
+                tuple_paths.add(tuple(p for p in map(lambda x: x[1], parts[:i])))
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, list):
+            items = [walk(v, path + (str(i),)) for i, v in enumerate(node)]
+            return tuple(items) if path in tuple_paths else items
+        return node
+
+    return walk(tree, ())
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.match(r"step_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Keeps the most recent `keep` checkpoints under `dir/step_N.npz`."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def save(self, step: int, tree: Any) -> str:
+        path = os.path.join(self.dir, f"step_{step}.npz")
+        save_pytree(path, tree)
+        self._gc()
+        return path
+
+    def restore(self, step: Optional[int] = None) -> Tuple[int, Any]:
+        step = step if step is not None else latest_step(self.dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return step, load_pytree(os.path.join(self.dir, f"step_{step}.npz"))
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1))
+            for f in os.listdir(self.dir)
+            if (m := re.match(r"step_(\d+)\.npz$", f))
+        )
+        for s in steps[: -self.keep]:
+            os.remove(os.path.join(self.dir, f"step_{s}.npz"))

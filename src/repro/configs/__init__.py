@@ -1,0 +1,73 @@
+"""Config registry: 10 assigned architectures + the paper's two minimind MoEs.
+
+Each module defines CONFIG (exact published dims, source cited) and the
+registry exposes get(name) / reduced_for_smoke(name).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, RoutingSpec, SSMSpec, reduced
+
+ARCH_IDS = [
+    "zamba2_7b",
+    "paligemma_3b",
+    "llama4_scout_17b_a16e",
+    "deepseek_coder_33b",
+    "phi4_mini_3_8b",
+    "mamba2_130m",
+    "seamless_m4t_large_v2",
+    "gemma2_27b",
+    "arctic_480b",
+    "stablelm_1_6b",
+    # the paper's own models (Minimind MoE)
+    "minimind_moe_16e",
+    "minimind_moe_64e",
+]
+
+# external ids (with dashes) as used on the CLI --arch flag
+CLI_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+CLI_ALIASES.update(
+    {
+        "zamba2-7b": "zamba2_7b",
+        "paligemma-3b": "paligemma_3b",
+        "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+        "deepseek-coder-33b": "deepseek_coder_33b",
+        "phi4-mini-3.8b": "phi4_mini_3_8b",
+        "mamba2-130m": "mamba2_130m",
+        "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+        "gemma2-27b": "gemma2_27b",
+        "arctic-480b": "arctic_480b",
+        "stablelm-1.6b": "stablelm_1_6b",
+    }
+)
+
+
+def get(name: str) -> ModelConfig:
+    key = CLI_ALIASES.get(name, name)
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(CLI_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def reduced_for_smoke(name: str, **overrides) -> ModelConfig:
+    return reduced(get(name), **overrides)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS",
+    "CLI_ALIASES",
+    "ModelConfig",
+    "RoutingSpec",
+    "SSMSpec",
+    "all_configs",
+    "get",
+    "reduced",
+    "reduced_for_smoke",
+]

@@ -1,0 +1,209 @@
+"""ModelConfig — the single config schema every architecture compiles from.
+
+A config fully determines: parameter shapes, the per-layer kind sequence
+(attention variant / dense vs MoE FFN / mamba / shared block), the routing
+strategy, sharding logical axes, and dtype policy. One file per assigned
+architecture lives next to this module; each cites its source in brackets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingSpec:
+    """Routing gate settings for MoE layers (see repro.core.types.RouterConfig)."""
+
+    n_experts: int = 0
+    top_k: int = 0
+    strategy: str = "bip"          # 'topk' | 'aux_loss' | 'lossfree' | 'bip'
+    bip_iters: int = 4
+    aux_loss_alpha: float = 0.1
+    lossfree_lr: float = 0.001
+    norm_topk_prob: bool = False
+    score_fn: str = "softmax"
+    capacity_factor: float = 1.25   # static capacity C = ceil(k·n/m · cf)
+    sync: str = "local"            # 'local' (per-shard duals) | 'global'
+    use_kernel: bool = False       # Pallas ADMM kernel for the dual update
+    # expert-parallel implementation (DESIGN.md §6 / EXPERIMENTS.md §Perf):
+    # 'ep2d' gathers activations, weights stay (experts->model, f->data)
+    #        sharded; routing sees the full microbatch (paper-global duals).
+    # 'ep'   FSDP path: weights gathered over data per layer per microbatch.
+    # 'auto' ep2d for small token counts (decode), ep for train/prefill.
+    moe_impl: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    """Mamba2 / SSD block settings."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity ---------------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm
+    source: str = ""       # citation, e.g. "[arXiv:2401.14196]"
+
+    # trunk ------------------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    tie_embeddings: bool = True
+    rms_norm_eps: float = 1e-6
+    act: str = "silu"          # 'silu' (swiglu) | 'gelu' (geglu)
+
+    # attention pattern ---------------------------------------------------
+    # Cycled across layers, e.g. ('local', 'global') for gemma2,
+    # ('local','local','local','global') for llama4 iRoPE. 'none' = mamba.
+    attn_pattern: Tuple[str, ...] = ("global",)
+    window_size: int = 0           # sliding window for 'local' layers
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    rope_local_theta: float = 0.0  # separate theta for local layers (gemma2/llama4)
+    qk_norm: bool = False
+    post_block_norms: bool = False  # gemma2-style post-attn / post-ffn norms
+
+    # MoE ----------------------------------------------------------------
+    routing: RoutingSpec = RoutingSpec()
+    moe_d_ff: int = 0              # expert hidden dim (0 -> d_ff)
+    moe_pattern: Tuple[bool, ...] = (True,)  # cycled: which layers are MoE
+    dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    n_shared_experts: int = 0      # always-on shared experts (minimind/deepseek style)
+
+    # SSM / hybrid ---------------------------------------------------------
+    ssm: SSMSpec = SSMSpec()
+    # hybrid: a weight-shared (attn+mlp) block applied every `shared_attn_every`
+    # backbone layers (zamba2-style).
+    shared_attn_every: int = 0
+
+    # encoder (encdec family) ---------------------------------------------
+    n_enc_layers: int = 0
+    enc_seq_len: int = 0           # encoder stub sequence length (frames)
+
+    # modality frontend stub (vlm / audio) ---------------------------------
+    frontend_tokens: int = 0       # patch/frame embeddings prepended (vlm)
+    frontend_dim: int = 0          # embedding dim delivered by the stub
+
+    # sequence / serving -----------------------------------------------------
+    max_seq_len: int = 8192
+    attn_chunk: int = 512          # query-chunk size for memory-tiled attention
+
+    # training memory policy ---------------------------------------------
+    # 'none' | 'block': jax.checkpoint around each scanned layer group so
+    # backward recomputes activations (required for the big configs at 4k).
+    remat: str = "none"
+
+    # dtype policy -----------------------------------------------------------
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # optimizer state dtypes (see repro.optim): 'fp32' | 'bf16'
+    adam_mu_dtype: str = "fp32"
+    adam_nu_dtype: str = "fp32"
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.routing.n_experts > 0
+
+    def layer_kinds(self) -> Tuple[Tuple[str, str], ...]:
+        """Per-layer (mixer_kind, ffn_kind) sequence.
+
+        mixer_kind: 'global' | 'local' | 'mamba' | 'mamba+shared'
+        ffn_kind:   'dense' | 'moe' | 'none' (mamba blocks carry their own gating)
+        """
+        kinds = []
+        for i in range(self.n_layers):
+            if self.family in ("ssm", "hybrid"):
+                mixer = "mamba"
+                if (
+                    self.shared_attn_every
+                    and (i + 1) % self.shared_attn_every == 0
+                ):
+                    mixer = "mamba+shared"
+                kinds.append((mixer, "none"))
+            else:
+                mixer = self.attn_pattern[i % len(self.attn_pattern)]
+                is_moe = self.is_moe and self.moe_pattern[i % len(self.moe_pattern)]
+                kinds.append((mixer, "moe" if is_moe else "dense"))
+        return tuple(kinds)
+
+    def scan_period(self) -> int:
+        """Layers per scan group: the smallest cycle of the layer-kind pattern."""
+        kinds = self.layer_kinds()
+        for p in range(1, len(kinds) + 1):
+            # smallest p such that the whole sequence is the cycled prefix;
+            # a non-dividing remainder is fine (the stack scans a short tail).
+            if all(kinds[i] == kinds[i % p] for i in range(len(kinds))):
+                return p
+        return len(kinds)
+
+    def validate(self) -> None:
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        if self.is_moe:
+            assert self.routing.top_k <= self.routing.n_experts
+        if "local" in self.attn_pattern:
+            assert self.window_size > 0, "local attention needs window_size"
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test variant: same family/pattern, tiny dims (<=512 d_model,
+    2 scan periods of layers, <=4 experts)."""
+    period = cfg.scan_period()
+    small: dict = dict(
+        n_layers=max(2, min(2 * period, cfg.n_layers)),
+        d_model=min(cfg.d_model, 128),
+        n_heads=min(cfg.n_heads, 4),
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        head_dim=32,
+        d_ff=min(cfg.d_ff, 256),
+        vocab_size=min(cfg.vocab_size, 512),
+        max_seq_len=256,
+        attn_chunk=64,
+        window_size=min(cfg.window_size, 64) if cfg.window_size else 0,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        enc_seq_len=min(cfg.enc_seq_len, 64),
+        frontend_tokens=min(cfg.frontend_tokens, 16),
+        frontend_dim=min(cfg.frontend_dim, 64) if cfg.frontend_dim else 0,
+        moe_d_ff=min(cfg.moe_d_ff, 128) if cfg.moe_d_ff else 0,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+    )
+    if cfg.is_moe:
+        small["routing"] = dataclasses.replace(
+            cfg.routing,
+            n_experts=min(cfg.routing.n_experts, 4),
+            top_k=min(cfg.routing.top_k, 2),
+        )
+    if cfg.family in ("ssm", "hybrid"):
+        small["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=min(cfg.ssm.d_state, 16), head_dim=32, chunk_size=32
+        )
+        if cfg.shared_attn_every:
+            small["shared_attn_every"] = 2
+            small["n_layers"] = 4
+    if cfg.n_kv_heads == cfg.n_heads:  # keep MHA configs MHA
+        small["n_kv_heads"] = small["n_heads"]
+    small.update(overrides)
+    out = dataclasses.replace(cfg, **small)
+    out.validate()
+    return out

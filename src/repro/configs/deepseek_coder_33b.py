@@ -1,0 +1,25 @@
+"""deepseek-coder-33b [dense] — llama-arch code model [arXiv:2401.14196].
+62L, d_model=7168, 56 heads (GQA kv=8, head_dim=128), d_ff=19200,
+vocab=32256, rope_theta=100000 (RoPE scaling for 16k ctx).
+
+Dense FFN: the paper's MoE routing is inapplicable (DESIGN.md
+§Arch-applicability). Pure full attention: long_500k decode is skipped
+(DESIGN.md §Skips).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    source="[arXiv:2401.14196]",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=100000.0,
+    max_seq_len=32768,
+    attn_chunk=512,
+)

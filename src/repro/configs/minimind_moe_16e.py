@@ -1,0 +1,38 @@
+"""minimind-moe 16-expert (0.3B) — the paper's own 16-expert model
+[Jingyaogong 2024, github.com/jingyaogong/minimind; paper Table 1].
+
+Paper Table 1: vocab 6400, 8 attention heads, 8 MoE layers, m=16 routed
+experts, k=4 activated, softmax gate, <20M params/expert, 0.3B total.
+Dims chosen to match: d_model=512, expert d_ff=1408 (3·512·1408 ≈ 2.2M
+params/expert; 16 experts × 8 layers ≈ 0.28B). One shared expert
+(minimind default). BIP routing with T=4 is the paper's best setting.
+"""
+from repro.configs.base import ModelConfig, RoutingSpec
+
+CONFIG = ModelConfig(
+    name="minimind-moe-16e",
+    family="moe",
+    source="[minimind; paper Table 1]",
+    n_layers=8,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=1408,
+    moe_d_ff=1408,
+    vocab_size=6400,
+    routing=RoutingSpec(
+        n_experts=16,
+        top_k=4,
+        strategy="bip",
+        bip_iters=4,
+        aux_loss_alpha=0.1,   # Loss-Controlled baseline setting (paper §4.1)
+        lossfree_lr=0.001,    # Loss-Free baseline setting   (paper §4.1)
+        score_fn="softmax",
+        capacity_factor=1.25,
+    ),
+    n_shared_experts=1,
+    rope_theta=10000.0,
+    max_seq_len=8192,
+    attn_chunk=512,
+)

@@ -1,0 +1,30 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal translation
+[arXiv:2308.11596]. Decoder 24L, d_model=1024, 16 heads (kv=16, head_dim=64),
+d_ff=8192, vocab=256206; 24-layer text/speech encoder.
+
+The conformer speech frontend (mel + conv codec) is a stub per the
+assignment carve-out: `input_specs()` provides 4096 frame embeddings of
+dim 1024; the encoder transformer, cross-attention, and decoder are real.
+Dense FFN: BIP inapplicable. 500k-token decode is out of this model's
+operating envelope — long_500k skipped (DESIGN.md §Skips).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    source="[arXiv:2308.11596]",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    enc_seq_len=4096,
+    frontend_dim=1024,
+    rope_theta=10000.0,
+    max_seq_len=32768,
+    attn_chunk=512,
+)

@@ -1,0 +1,41 @@
+"""repro.core — BIP-Based Expert Load Balancing (the paper's contribution).
+
+Public surface:
+  RouterConfig / init_router_state / route   — unified gate (all 4 strategies)
+  bip_dual_update / bip_route_reference      — pure-jnp Algorithm 1/2 oracle
+  OnlineBIPGate / ApproxBIPGate              — Algorithm 3 / 4 (streaming)
+  balance_metrics / BalanceTracker           — MaxVio / AvgMaxVio / SupMaxVio
+"""
+from repro.core.approx import ApproxBIPGate
+from repro.core.metrics import BalanceTracker, balance_metrics, expert_load, max_violation
+from repro.core.online import OnlineBIPGate
+from repro.core.ref_bip import (
+    bip_dual_update,
+    bip_dual_update_threshold,
+    bip_route_reference,
+    bip_topk,
+    kth_largest,
+    kth_largest_threshold,
+)
+from repro.core.router import compute_scores, route
+from repro.core.types import RouterConfig, RouterOutput, init_router_state
+
+__all__ = [
+    "ApproxBIPGate",
+    "BalanceTracker",
+    "OnlineBIPGate",
+    "RouterConfig",
+    "RouterOutput",
+    "balance_metrics",
+    "bip_dual_update",
+    "bip_dual_update_threshold",
+    "bip_route_reference",
+    "bip_topk",
+    "compute_scores",
+    "expert_load",
+    "init_router_state",
+    "kth_largest",
+    "kth_largest_threshold",
+    "max_violation",
+    "route",
+]

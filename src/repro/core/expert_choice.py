@@ -1,0 +1,54 @@
+"""Expert-Choice routing [Zhou et al. 2022] — the beyond-paper comparison.
+
+Instead of tokens picking experts (token-choice, what BIP balances), each
+EXPERT picks its top-C tokens (C = k·n/m). Balance is then perfect *by
+construction* — but the assignment solves a different program: column-wise
+greedy selection rather than the global (BIP) objective, so
+
+  * tokens may receive fewer than k experts (possibly zero) — "coverage"
+    loss instead of capacity drops;
+  * the total routed score mass is below the LP optimum whenever popular
+    tokens crowd out others;
+  * it is incompatible with autoregressive DECODING (an expert's top-C over
+    the batch leaks future tokens within a sequence during training-style
+    batched selection) — the standard caveat.
+
+`benchmarks.expert_choice_compare` quantifies the trade against BIP:
+balance (trivially 0 violation) vs objective ratio vs token coverage.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def expert_choice_route(
+    s: jnp.ndarray, top_k: int
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Each expert takes its top-C tokens, C = ceil(k·n/m).
+
+    Returns (assignment mask (n, m) float — gate values on selected pairs,
+    metrics dict with coverage/load stats).
+    """
+    n, m = s.shape
+    c = max((n * top_k) // m, 1)
+    # top-C tokens per expert (column-wise)
+    _, idx = lax.top_k(s.T, c)  # (m, C) token indices
+    mask = jnp.zeros((n, m), s.dtype)
+    expert_ids = jnp.broadcast_to(jnp.arange(m)[:, None], (m, c))
+    mask = mask.at[idx.reshape(-1), expert_ids.reshape(-1)].set(1.0)
+    gates = mask * s
+
+    per_token = mask.sum(axis=1)  # experts per token
+    mets = {
+        "load": mask.sum(axis=0),               # == C per expert (perfect)
+        "max_vio": jnp.zeros(()),               # by construction
+        "coverage_full": jnp.mean((per_token >= top_k).astype(jnp.float32)),
+        "coverage_zero": jnp.mean((per_token == 0).astype(jnp.float32)),
+        "mean_experts_per_token": per_token.mean(),
+        "objective": gates.sum(),
+    }
+    return gates, mets

@@ -1,0 +1,69 @@
+"""Load-balance measurements from the paper (Section 4.1).
+
+MaxVio_batch = max_j Load_j / mean_load - 1, where Load_j is the number of
+tokens matched to expert j in the batch and mean_load = k*n/m.
+
+AvgMaxVio / SupMaxVio are the mean / max of MaxVio over all training batches;
+they are accumulated outside jit by `BalanceTracker`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def expert_load(expert_index: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Tokens matched per expert. expert_index: (..., k) int32 -> (m,) float32."""
+    flat = expert_index.reshape(-1)
+    return jnp.zeros((n_experts,), jnp.float32).at[flat].add(1.0)
+
+
+def max_violation(load: jnp.ndarray, n_tokens: int, top_k: int) -> jnp.ndarray:
+    """MaxVio for one batch given the per-expert load vector."""
+    mean_load = (n_tokens * top_k) / load.shape[0]
+    return jnp.max(load) / mean_load - 1.0
+
+
+def balance_metrics(
+    expert_index: jnp.ndarray, n_experts: int, top_k: int
+) -> Dict[str, jnp.ndarray]:
+    n = int(np.prod(expert_index.shape[:-1]))
+    load = expert_load(expert_index, n_experts)
+    mean_load = (n * top_k) / n_experts
+    frac = load / jnp.maximum(load.sum(), 1.0)
+    entropy = -jnp.sum(frac * jnp.log(frac + 1e-9))
+    return {
+        "load": load,
+        "max_vio": jnp.max(load) / mean_load - 1.0,
+        "min_load_frac": jnp.min(load) / mean_load,
+        "load_entropy": entropy / np.log(n_experts),  # 1.0 == perfectly uniform
+        "dropped_frac_cap1": jnp.sum(jnp.maximum(load - mean_load, 0.0))
+        / jnp.maximum(load.sum(), 1.0),
+    }
+
+
+@dataclasses.dataclass
+class BalanceTracker:
+    """Accumulates per-batch MaxVio into AvgMaxVio / SupMaxVio (host side).
+
+    One tracker per MoE layer; `add` takes the already-device-fetched scalar.
+    """
+
+    max_vios: List[float] = dataclasses.field(default_factory=list)
+
+    def add(self, max_vio: float) -> None:
+        self.max_vios.append(float(max_vio))
+
+    @property
+    def avg_max_vio(self) -> float:
+        return float(np.mean(self.max_vios)) if self.max_vios else 0.0
+
+    @property
+    def sup_max_vio(self) -> float:
+        return float(np.max(self.max_vios)) if self.max_vios else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"AvgMaxVio": self.avg_max_vio, "SupMaxVio": self.sup_max_vio}

@@ -1,0 +1,221 @@
+"""Pure-jnp reference implementation of BIP-Based Balancing (Algorithm 1 / 2).
+
+This is the oracle. The Pallas kernel (`repro.kernels.bip_admm`) and the
+distributed variants are tested against these functions.
+
+Algorithm 1 (inner loop, per gate invocation), for score matrix s in R^{n x m}:
+
+    for t = 1..T:
+        P   = s - 1_n^T q                      # (n, m)
+        p_i = max(0, (k+1)-th largest of P_i)  # row-wise selection
+        Q   = s^T - 1_m^T p                    # (m, n);  Q_ji = s_ij - p_i
+        q_j = max(0, (nk/m+1)-th largest of Q_j)
+
+    g_ij = s_ij  if  s_ij - q_j in TopK({s_it - q_t}, k)  else 0
+
+Interpretation: (p, q) are the dual prices of the relaxed assignment LP; ADMM
+coordinate steps on the dual are closed-form order statistics. Gate *values*
+stay the raw scores, so q carries no gradient (like Loss-Free's bias).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def expert_kth_index(n: int, k: int, m: int) -> int:
+    """0-based order-statistic index for the (nk/m + 1)-th largest of n values.
+
+    Returns floor(n*k/m); values at that index or beyond are "over capacity".
+    If the index falls past the end (m >= n*k, more capacity than tokens) the
+    constraint is slack and q_j must be 0 — signalled by returning -1.
+    """
+    idx = (n * k) // m
+    return -1 if idx >= n else idx
+
+
+def kth_largest(x: jnp.ndarray, kth: int, axis: int = -1) -> jnp.ndarray:
+    """Value of the (kth+1)-th largest element along `axis` (0-based kth)."""
+    # lax.top_k operates on the last axis.
+    moved = jnp.moveaxis(x, axis, -1)
+    vals = lax.top_k(moved, kth + 1)[0][..., kth]
+    return vals
+
+
+def bip_dual_update(
+    s: jnp.ndarray,
+    q0: jnp.ndarray,
+    *,
+    top_k: int,
+    n_iters: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """T iterations of the ADMM dual update. Returns (q, p).
+
+    s:  (n, m) routing scores for the current batch (float).
+    q0: (m,) warm-start expert prices (zeros on the first batch).
+    """
+    n, m = s.shape
+    cap_idx = expert_kth_index(n, top_k, m)
+
+    def body(_, pq):
+        q, _p = pq
+        # p_i = max(0, (k+1)-th largest of s_i - q); k == m -> no (k+1)-th
+        # largest exists (all experts selected), token constraint is slack.
+        if top_k >= m:
+            p = jnp.zeros((n,), s.dtype)
+        else:
+            p = jnp.maximum(0.0, kth_largest(s - q[None, :], top_k, axis=-1))
+        # q_j = max(0, (nk/m + 1)-th largest of s_:j - p)
+        if cap_idx < 0:
+            q_new = jnp.zeros_like(q)
+        else:
+            q_new = jnp.maximum(0.0, kth_largest(s - p[:, None], cap_idx, axis=0))
+        return (q_new, p)
+
+    # inherit s's varying-manual-axes type (shard_map vma): inside a
+    # shard_map over data axes the loop carry must be typed 'varying' from
+    # iteration 0, and adding 0·s does exactly that with no semantic change
+    p0 = 0.0 * s[:, 0]
+    q_init = q0.astype(s.dtype) + 0.0 * s[0]
+    q, p = lax.fori_loop(0, n_iters, body, (q_init, p0))
+    return q, p
+
+
+def bip_topk(
+    s: jnp.ndarray, q: jnp.ndarray, top_k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Select top-k experts by corrected scores s - q; gate values are raw s.
+
+    Returns (combine_weights (n,k), expert_index (n,k) int32).
+    """
+    corrected = s - q[None, :]
+    _, idx = lax.top_k(corrected, top_k)
+    weights = jnp.take_along_axis(s, idx, axis=-1)
+    return weights, idx.astype(jnp.int32)
+
+
+def bip_route_reference(
+    s: jnp.ndarray, q0: jnp.ndarray, *, top_k: int, n_iters: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full Algorithm 1 gate: dual update then biased top-k.
+
+    Returns (combine_weights, expert_index, q_new).
+    """
+    q, _ = bip_dual_update(s, q0, top_k=top_k, n_iters=n_iters)
+    w, idx = bip_topk(s, q, top_k)
+    return w, idx, q
+
+
+# ---------------------------------------------------------------------------
+# Sort-free variant: order statistics via threshold binary search.
+#
+# This mirrors what the Pallas kernel does on TPU (compare + reduce only, no
+# sort network), and is also the building block for sync='global' routing:
+# the count reduction can be extended with lax.psum over data axes so the
+# order statistic is computed over the *global* token set while each device
+# only holds its local shard.
+# ---------------------------------------------------------------------------
+
+
+def _count_greater(x: jnp.ndarray, thr: jnp.ndarray, axis: int, axis_names) -> jnp.ndarray:
+    cnt = jnp.sum((x > thr).astype(jnp.float32), axis=axis)
+    if axis_names:
+        cnt = lax.psum(cnt, axis_names)
+    return cnt
+
+
+def kth_largest_threshold(
+    x: jnp.ndarray,
+    kth: int,
+    *,
+    axis: int = -1,
+    n_bisect: int = 26,
+    axis_names: tuple = (),
+    lo: Optional[jnp.ndarray] = None,
+    hi: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """(kth+1)-th largest along `axis` via bisection on the value domain.
+
+    Finds the largest threshold t such that #{x > t} <= kth; the order
+    statistic lies in (t_lo, t_hi] and we return the midpoint after `n_bisect`
+    halvings. With `axis_names`, counts (and bounds) are reduced across those
+    mesh axes, computing a global order statistic over sharded data at the
+    cost of ~n_bisect scalar collectives (fused into one psum per iteration).
+
+    Exactness: for routing we only need the *set* {x > t} to have kth elements;
+    26 bisections over a [-2, 2] range give ~6e-8 resolution, far below any
+    meaningful score gap in fp32 softmax outputs.
+    """
+    if lo is None:
+        lo = jnp.min(x, axis=axis)
+        if axis_names:
+            lo = lax.pmin(lo, axis_names)
+    if hi is None:
+        hi = jnp.max(x, axis=axis)
+        if axis_names:
+            hi = lax.pmax(hi, axis_names)
+    lo = lo - 1e-6  # ensure the answer is strictly inside (lo, hi]
+
+    def body(_, bounds):
+        lo_, hi_ = bounds
+        mid = 0.5 * (lo_ + hi_)
+        cnt = _count_greater(x, jnp.expand_dims(mid, axis), axis, axis_names)
+        # If more than `kth` elements exceed mid, the (kth+1)-th largest is
+        # above mid; move lo up. Else it is <= mid; move hi down.
+        above = cnt > kth
+        lo_ = jnp.where(above, mid, lo_)
+        hi_ = jnp.where(above, hi_, mid)
+        return (lo_, hi_)
+
+    lo, hi = lax.fori_loop(0, n_bisect, body, (lo, hi))
+    return hi  # upper end: guarantees #{x > hi} <= kth (capacity respected)
+
+
+def bip_dual_update_threshold(
+    s: jnp.ndarray,
+    q0: jnp.ndarray,
+    *,
+    top_k: int,
+    n_iters: int,
+    n_tokens_global: Optional[int] = None,
+    axis_names: tuple = (),
+    n_bisect: int = 26,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-free ADMM dual update; optionally global over sharded tokens.
+
+    With axis_names=() this matches `bip_dual_update` up to bisection
+    resolution. With axis_names set, `s` is the device-local (n_local, m)
+    shard and the expert-price step uses global counts, reproducing the
+    paper's single-device semantics under data parallelism.
+    """
+    n, m = s.shape
+    n_glob = n_tokens_global if n_tokens_global is not None else n
+    cap_idx = expert_kth_index(n_glob, top_k, m)
+
+    def body(_, pq):
+        q, _p = pq
+        # Row-wise (k+1)-th largest over m (m is small; per-token, local).
+        if top_k >= m:
+            p = jnp.zeros((n,), s.dtype)
+        else:
+            p = jnp.maximum(0.0, kth_largest(s - q[None, :], top_k, axis=-1))
+        if cap_idx < 0:
+            q_new = jnp.zeros_like(q)
+        else:
+            q_new = jnp.maximum(
+                0.0,
+                kth_largest_threshold(
+                    s - p[:, None], cap_idx, axis=0,
+                    axis_names=axis_names, n_bisect=n_bisect,
+                ),
+            )
+        return (q_new, p)
+
+    p0 = 0.0 * s[:, 0]  # inherit s's vma type (see bip_dual_update)
+    q_init = q0.astype(s.dtype) + 0.0 * s[0]
+    q, p = lax.fori_loop(0, n_iters, body, (q_init, p0))
+    return q, p

@@ -1,0 +1,145 @@
+"""Unified top-k router with all three balancing strategies from the paper.
+
+One API for:
+  * 'topk'      — vanilla top-k (no balancing; the collapse-prone baseline)
+  * 'aux_loss'  — Loss-Controlled (GShard/Switch auxiliary loss, α·Σ f_j P_j)
+  * 'lossfree'  — Loss-Free (Wang et al. 2024): per-batch sign update of bias b
+  * 'bip'       — BIP-Based Balancing (this paper): per-gate ADMM dual update of q
+
+All strategies share RouterState {'q': (m,)}; for 'lossfree' the vector plays
+the role of the bias b (added), for 'bip' the dual price q (subtracted). Gate
+*values* are always the raw scores of the selected experts, so neither vector
+receives gradient — only 'aux_loss' shapes gradients, via its explicit loss.
+
+The router is functional: `route(logits, state, cfg)` returns RouterOutput with
+the new state; the training loop threads state through like any other pytree.
+
+Distribution note (see DESIGN.md §3.3): under jit/pjit the math below is
+written over the *global* token batch, so sync='global' is simply the default
+program — XLA inserts the collectives for the column order statistic when
+tokens are sharded. sync='local' reshapes tokens into `local_shards`
+independent groups and vmaps the dual update, eliminating router collectives;
+with batch sharded over the data axes and local_shards == n_data_shards, each
+group's computation stays device-local.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ref_bip
+from repro.core.metrics import balance_metrics
+from repro.core.types import RouterConfig, RouterOutput, init_router_state
+
+
+def compute_scores(logits: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
+    """Gating function G. Paper / minimind: softmax over experts."""
+    logits = logits.astype(cfg.router_dtype)
+    if cfg.score_fn == "softmax":
+        return jax.nn.softmax(logits, axis=-1)
+    return jax.nn.sigmoid(logits)
+
+
+def _topk_select(
+    s: jnp.ndarray, corrected: jnp.ndarray, cfg: RouterConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k on `corrected` scores, gate values gathered from raw `s`."""
+    _, idx = lax.top_k(corrected, cfg.top_k)
+    w = jnp.take_along_axis(s, idx, axis=-1)
+    if cfg.norm_topk_prob:
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)
+
+
+def _aux_loss(s: jnp.ndarray, idx: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
+    """L_balance = α Σ_j f_j P_j (Loss-Controlled method).
+
+    f_j = m/(k n) Σ_i δ_ij  (token fraction, non-differentiable -> stopped),
+    P_j = 1/n Σ_i s_ij      (mean gate score, carries the gradient).
+    """
+    n, m = s.shape
+    onehot = jax.nn.one_hot(idx, m, dtype=s.dtype)  # (n, k, m)
+    f = lax.stop_gradient(onehot.sum(axis=(0, 1))) * (m / (cfg.top_k * n))
+    p_mean = s.mean(axis=0)
+    return cfg.aux_loss_alpha * jnp.sum(f * p_mean)
+
+
+def _bip_q(s: jnp.ndarray, q0: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
+    """Dispatch the ADMM dual update to the reference or the Pallas kernel."""
+    if cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+
+        return kernel_ops.bip_dual_update(
+            s, q0, top_k=cfg.top_k, n_iters=cfg.bip_iters
+        )
+    q, _ = ref_bip.bip_dual_update(s, q0, top_k=cfg.top_k, n_iters=cfg.bip_iters)
+    return q
+
+
+def route(
+    logits: jnp.ndarray,
+    state: Dict[str, jnp.ndarray],
+    cfg: RouterConfig,
+    *,
+    local_shards: int = 1,
+) -> RouterOutput:
+    """Route a flattened batch of tokens.
+
+    logits: (n, m) router logits (pre-gating-function).
+    state:  {'q': (m,)} carried vector (ADMM warm start / Loss-Free bias).
+    """
+    n, m = logits.shape
+    assert m == cfg.n_experts, (m, cfg.n_experts)
+    s = compute_scores(logits, cfg)
+    q0 = state["q"]
+    aux = jnp.zeros((), dtype=cfg.router_dtype)
+    new_q = q0
+
+    if cfg.strategy == "bip":
+        if local_shards > 1 and cfg.sync == "local":
+            s_grp = lax.stop_gradient(s).reshape(local_shards, n // local_shards, m)
+            q_grp = jax.vmap(lambda sg: _bip_q(sg, q0, cfg))(s_grp)  # (S, m)
+            corrected = (
+                s.reshape(local_shards, -1, m) - q_grp[:, None, :]
+            ).reshape(n, m)
+            new_q = q_grp.mean(axis=0)  # replicated warm start for next batch
+        else:
+            q = _bip_q(lax.stop_gradient(s), q0, cfg)
+            corrected = s - q[None, :]
+            new_q = q
+        w, idx = _topk_select(s, corrected, cfg)
+        if not cfg.bip_warm_start:
+            new_q = jnp.zeros_like(q0)
+
+    elif cfg.strategy == "lossfree":
+        # bias is ADDED to scores for selection (Wang et al. eq. for g').
+        corrected = s + q0[None, :]
+        w, idx = _topk_select(s, corrected, cfg)
+        # Per-batch sign update: b += u * sign(mean_load - load_j).
+        load = lax.stop_gradient(
+            jax.nn.one_hot(idx, m, dtype=cfg.router_dtype).sum(axis=(0, 1))
+        )
+        err = load.mean() - load
+        new_q = q0 + cfg.lossfree_lr * jnp.sign(err)
+
+    elif cfg.strategy == "aux_loss":
+        w, idx = _topk_select(s, s, cfg)
+        aux = _aux_loss(s, idx, cfg)
+
+    else:  # 'topk'
+        w, idx = _topk_select(s, s, cfg)
+
+    metrics = balance_metrics(idx, m, cfg.top_k)
+    return RouterOutput(
+        combine_weights=w,
+        expert_index=idx,
+        state={"q": lax.stop_gradient(new_q)},
+        aux_loss=aux,
+        metrics=metrics,
+    )
+
+
+__all__ = ["route", "compute_scores", "RouterConfig", "RouterOutput", "init_router_state"]

@@ -1,0 +1,90 @@
+"""Shared types for the routing core.
+
+Everything is a frozen dataclass (static config) or a plain pytree (state), so it
+composes with jax.jit / pjit without hashability surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+Array = Any  # jax.Array; kept loose so ShapeDtypeStruct stand-ins also pass.
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Static configuration of one routing gate.
+
+    Attributes:
+      n_experts: m, number of routed experts.
+      top_k: k, experts chosen per token.
+      strategy: one of 'topk' | 'aux_loss' | 'lossfree' | 'bip'.
+      bip_iters: T in Algorithm 1 (ADMM dual iterations per gate invocation).
+      bip_warm_start: carry q across batches (paper: q is maintained per layer).
+      aux_loss_alpha: α for the Loss-Controlled method.
+      lossfree_lr: u, bias update rate for the Loss-Free method.
+      norm_topk_prob: renormalize the selected gate values to sum to 1.
+      score_fn: 'softmax' (paper / minimind) or 'sigmoid' (DeepSeek-V3 style).
+      router_dtype: dtype for score/dual computation (fp32 for stability).
+      use_kernel: route the ADMM dual update through the Pallas kernel.
+      sync: 'local' computes dual prices from the device-local token shard;
+        'global' all-reduces selection histograms across the data axes so q
+        matches the single-device paper semantics exactly.
+      data_axes: mesh axis name(s) tokens are sharded over (for sync='global').
+    """
+
+    n_experts: int
+    top_k: int
+    strategy: str = "bip"
+    bip_iters: int = 4
+    bip_warm_start: bool = True
+    aux_loss_alpha: float = 0.1
+    lossfree_lr: float = 0.001
+    norm_topk_prob: bool = False
+    score_fn: str = "softmax"
+    router_dtype: Any = jnp.float32
+    use_kernel: bool = False
+    sync: str = "local"
+    data_axes: tuple = ()
+
+    def __post_init__(self):
+        if self.strategy not in ("topk", "aux_loss", "lossfree", "bip"):
+            raise ValueError(f"unknown routing strategy {self.strategy!r}")
+        if not (0 < self.top_k <= self.n_experts):
+            raise ValueError("need 0 < top_k <= n_experts")
+        if self.score_fn not in ("softmax", "sigmoid"):
+            raise ValueError(f"unknown score_fn {self.score_fn!r}")
+
+
+def init_router_state(cfg: RouterConfig) -> Dict[str, Array]:
+    """Per-gate mutable state, carried through the training loop as a pytree.
+
+    'q' doubles as the Loss-Free bias vector b (same shape, same role: an
+    additive correction that reorders top-k), so checkpoints are strategy
+    portable.
+    """
+    return {"q": jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)}
+
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RouterOutput:
+    """Result of routing one flattened batch of n tokens.
+
+    combine_weights: (n, k) gate values g for the selected experts.
+    expert_index:    (n, k) int32 selected expert ids.
+    state:           updated router state (q / bias vector).
+    aux_loss:        scalar auxiliary loss (0 unless strategy='aux_loss').
+    metrics:         dict with 'load' (m,), 'max_vio' (scalar), 'scores_mean'...
+    """
+
+    combine_weights: Array
+    expert_index: Array
+    state: Dict[str, Array]
+    aux_loss: Array
+    metrics: Dict[str, Array]

@@ -1,0 +1,4 @@
+"""repro.data — synthetic LM data pipeline."""
+from repro.data.synthetic import SyntheticLMDataset, make_batches, input_specs
+
+__all__ = ["SyntheticLMDataset", "make_batches", "input_specs"]

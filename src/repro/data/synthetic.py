@@ -1,0 +1,136 @@
+"""Synthetic language-modeling data with learnable structure.
+
+The paper trains on the Minimind Chinese web-text corpus, which we cannot
+ship; all its claims are *relative between routing methods on identical
+data*, so any corpus with (a) a skewed unigram distribution and (b)
+predictable sequential structure reproduces the phenomenon: skew creates
+routing-collapse pressure (some experts see far more tokens), structure
+gives the model something to learn so perplexity separates methods.
+
+The generator is a small order-2 Markov chain over the vocab with
+Zipf-distributed stationary probabilities and deterministic "grammar"
+transitions mixed in. Fully deterministic given the seed; shards
+reproducibly by (host, step).
+
+`input_specs(cfg, shape)` builds ShapeDtypeStruct stand-ins for the dry-run
+(no allocation), covering every model input including modality stubs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticLMDataset:
+    """Order-2 mixture: zipf unigrams + cyclic grammar, split train/test."""
+
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    structure: float = 0.75  # fraction of steps that follow the grammar
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = self.vocab_size
+        probs = 1.0 / np.arange(1, v + 1) ** self.zipf_a
+        self._probs = probs / probs.sum()
+        # deterministic successor table ("grammar"): tok -> next tok
+        self._succ = rng.permutation(v).astype(np.int64)
+        self._rng = rng
+
+    def sample_tokens(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        out = np.empty(n, dtype=np.int64)
+        out[0] = rng.choice(self.vocab_size, p=self._probs)
+        structured = rng.random(n) < self.structure
+        iid = rng.choice(self.vocab_size, size=n, p=self._probs)
+        for t in range(1, n):
+            out[t] = self._succ[out[t - 1]] if structured[t] else iid[t]
+        return out
+
+    def batches(
+        self, batch_size: int, n_batches: int, split: str = "train"
+    ) -> Iterator[Dict[str, jnp.ndarray]]:
+        """Deterministic batch stream; 'test' uses a disjoint seed stream."""
+        base = self.seed * 1_000_003 + (500_000 if split == "test" else 0)
+        for b in range(n_batches):
+            rng = np.random.default_rng(base + b)
+            toks = np.stack(
+                [self.sample_tokens(rng, self.seq_len + 1) for _ in range(batch_size)]
+            )
+            yield {
+                "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            }
+
+
+def make_batches(cfg: ModelConfig, batch_size: int, seq_len: int, n_batches: int,
+                 seed: int = 0, split: str = "train"):
+    ds = SyntheticLMDataset(cfg.vocab_size, seq_len, seed=seed)
+    for batch in ds.batches(batch_size, n_batches, split):
+        batch = dict(batch)
+        _add_frontend_stubs(cfg, batch, batch_size, numeric=True, seed=seed)
+        yield batch
+
+
+def _add_frontend_stubs(cfg, batch, batch_size, numeric=False, seed=0):
+    if cfg.family == "vlm":
+        shape = (batch_size, cfg.frontend_tokens, cfg.frontend_dim)
+        batch["patches"] = (
+            jnp.asarray(np.random.default_rng(seed).standard_normal(shape), jnp.float32)
+            if numeric
+            else jax.ShapeDtypeStruct(shape, jnp.float32)
+        )
+    if cfg.family == "encdec":
+        shape = (batch_size, cfg.enc_seq_len, cfg.frontend_dim)
+        batch["frames"] = (
+            jnp.asarray(np.random.default_rng(seed).standard_normal(shape), jnp.float32)
+            if numeric
+            else jax.ShapeDtypeStruct(shape, jnp.float32)
+        )
+
+
+# --------------------------------------------------------------- dry-run
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One assigned (seq_len, global_batch) workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)}
+    else:  # decode: one new token per sequence; the KV/state cache holds seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    _add_frontend_stubs(cfg, specs, b, numeric=False)
+    return specs

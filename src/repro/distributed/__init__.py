@@ -1,0 +1,20 @@
+"""repro.distributed — mesh-layout rules for params, optimizer, batch, caches."""
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    make_mesh_ctx,
+    param_specs,
+    router_state_specs,
+    shard_tree,
+    train_state_specs,
+)
+
+__all__ = [
+    "batch_specs",
+    "cache_specs",
+    "make_mesh_ctx",
+    "param_specs",
+    "router_state_specs",
+    "shard_tree",
+    "train_state_specs",
+]

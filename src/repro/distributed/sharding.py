@@ -1,0 +1,259 @@
+"""Sharding rules: map every tensor in the system to a PartitionSpec.
+
+Layout (DESIGN.md §6), mesh axes ('pod',) 'data', 'model':
+
+* activations/batch: tokens over (pod, data); d_model replicated.
+* tensor parallelism over 'model': attention heads, FFN hidden, MoE expert
+  dim, mamba inner dim, vocab (embed/unembed).
+* FSDP over 'data': every parameter additionally shards its largest
+  non-model axis over (pod, data) — required: none of the large configs fit
+  params+optimizer replicated over the data axis (e.g. deepseek-33b fp32
+  Adam = 528 GB). GSPMD inserts the just-in-time all-gathers (ZeRO-3
+  semantics); their cost shows up in the collective roofline term and is a
+  §Perf hillclimb axis.
+* optimizer state: same spec as its parameter.
+* router state q: replicated (it is the per-layer dual price vector).
+* KV caches: batch over (pod, data) when it divides; the cache length axis
+  over 'model' when kv_heads doesn't divide the model axis, else kv_heads
+  over 'model'. long_500k (batch=1) shards the cache length over every axis.
+
+Rules are resolved per-tensor from (path, shape) with divisibility checks —
+anything that doesn't divide cleanly falls back to replication on that axis
+rather than relying on GSPMD padding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.stack import MeshCtx
+
+
+def make_mesh_ctx(mesh: Optional[Mesh]) -> MeshCtx:
+    if mesh is None:
+        return MeshCtx()
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    return MeshCtx(mesh=mesh, data_axes=data_axes, model_axis="model")
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# --------------------------------------------------------------- params
+
+
+_MODEL_AXIS_BY_NAME = {
+    # tensor-parallel axis index per parameter name (after the stack dim)
+    "wq": 1,       # (d, H, hd) -> heads
+    "wk": 1,
+    "wv": 1,
+    "wo": 0,       # (H, hd, d) -> heads
+    "w_gate": -1,  # (d, f) / (m, d, f): last axis = hidden f
+    "w_up": -1,
+    "w_down": -2,  # (f, d) / (m, f, d): f
+    "in_proj": 1,  # mamba (d, d_in_proj)
+    "out_proj": 0, # mamba (d_inner, d)
+    "conv_w": 1,   # (K, conv_dim)
+    "conv_b": 0,
+    "norm_scale": 0,  # (d_inner,)
+    "tok": 0,      # (V, d) -> vocab
+    "unembed": 1,  # (d, V)
+}
+_MOE_EXPERT_PARAMS = {"w_gate", "w_up", "w_down"}
+_REPLICATED = {"scale", "A_log", "D", "dt_bias", "w_router", "frontend_proj"}
+
+
+def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+                data_axes: Tuple[str, ...], stacked: bool) -> P:
+    name = path[-1]
+    spec = [None] * len(shape)
+    ndim_offset = 1 if stacked else 0  # leading scan-stack axis stays unsharded
+
+    moe_ctx = any(p in ("moe",) for p in path)
+    if name in _REPLICATED and not (moe_ctx and name == "w_router"):
+        pass  # fully replicated (tiny)
+    elif name == "frontend_proj" or name == "w_router":
+        pass
+    elif moe_ctx and name in _MOE_EXPERT_PARAMS:
+        # (stack, m, d, f) expert weights: experts over 'model', and the
+        # expert-hidden f over the data axes — the ep2d at-rest layout
+        # (weights are used exactly as stored; no gather).
+        e_ax = ndim_offset
+        if shape[e_ax] % mesh.shape["model"] == 0:
+            spec[e_ax] = "model"
+        f_ax = len(shape) - 1 if name in ("w_gate", "w_up") else len(shape) - 2
+        dsize = _axis_size(mesh, data_axes)
+        if data_axes and shape[f_ax] % dsize == 0 and shape[f_ax] >= dsize:
+            spec[f_ax] = data_axes if len(data_axes) > 1 else data_axes[0]
+    elif name in _MODEL_AXIS_BY_NAME:
+        raw = _MODEL_AXIS_BY_NAME[name]
+        ax = raw + ndim_offset if raw >= 0 else len(shape) + raw
+        if 0 <= ax < len(shape) and shape[ax] % mesh.shape["model"] == 0:
+            spec[ax] = "model"
+
+    # FSDP: shard the largest remaining axis over the data axes. If the
+    # tensor-parallel rule found no home for 'model' (e.g. 56 heads on a
+    # 16-wide model axis), fold 'model' into the FSDP axis too so big
+    # tensors always shard over the full chip count (ZeRO-3 over 256/512).
+    data_used = any(
+        sp is not None and (sp in data_axes or (isinstance(sp, tuple) and any(a in data_axes for a in sp)))
+        for sp in spec
+    )
+    if data_axes and not data_used and np.prod(shape) >= 1 << 16:  # skip tiny tensors
+        dsize = _axis_size(mesh, data_axes)
+        model_used = any(sp == "model" for sp in spec)
+        # fold 'model' into the FSDP axis only when the data-only shard
+        # would still be big (>=128 MiB): needed for e.g. deepseek's
+        # 56-head attention weights, but folding small tensors makes GSPMD
+        # replicate compute around the re-partition (3.6x flops on mamba2 —
+        # dry-run finding, see EXPERIMENTS.md §Perf).
+        big_after_data = (np.prod(shape) * 4 / dsize) >= (1 << 27)
+        fold_model = (not model_used) and big_after_data
+        fsdp_axes = tuple(data_axes) + (("model",) if fold_model else ())
+        fsize = _axis_size(mesh, fsdp_axes)
+        candidates = [
+            (shape[i], i)
+            for i in range(ndim_offset, len(shape))
+            if spec[i] is None and shape[i] % fsize == 0 and shape[i] >= fsize
+        ]
+        if not candidates and fold_model:
+            # fall back to data-only FSDP when nothing divides the combo
+            fsdp_axes = tuple(data_axes)
+            fsize = _axis_size(mesh, fsdp_axes)
+            candidates = [
+                (shape[i], i)
+                for i in range(ndim_offset, len(shape))
+                if spec[i] is None and shape[i] % fsize == 0 and shape[i] >= fsize
+            ]
+        if candidates:
+            _, i = max(candidates)
+            spec[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*spec)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching the params tree."""
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        names = tuple(k for k in keys if not k.isdigit())
+        # scan-stacked layer params carry a leading group axis
+        stacked = "blocks" in keys or "layers" in keys
+        specs.append(_param_spec(names, leaf.shape, mesh, data_axes, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------- everything else
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_size: int) -> Dict[str, P]:
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = _axis_size(mesh, data_axes)
+    bspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    if batch_size % dsize != 0 or batch_size < dsize:
+        bspec = None  # tiny batches (long_500k) stay replicated
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.family == "vlm":
+        out["patches"] = P(bspec, None, None)
+    if cfg.family == "encdec":
+        out["frames"] = P(bspec, None, None)
+    return out
+
+
+def router_state_specs(router_states: Any) -> Any:
+    return jax.tree.map(lambda _: P(), router_states)
+
+
+def train_state_specs(state, cfg: ModelConfig, mesh: Mesh):
+    """Specs for TrainState(params, opt_state{step,mu,nu}, router_states)."""
+    from repro.training.loop import TrainState
+
+    pspec = param_specs(state.params, cfg, mesh)
+    return TrainState(
+        params=pspec,
+        opt_state={
+            "step": P(),
+            "mu": pspec,
+            "nu": pspec,
+        },
+        router_states=router_state_specs(state.router_states),
+    )
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh, batch_size: int) -> Any:
+    """Decode-cache specs. Leaves are stacked (G, B, ...) per scan group."""
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = _axis_size(mesh, data_axes)
+    msize = mesh.shape["model"]
+    bspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    batch_ok = batch_size % dsize == 0 and batch_size >= dsize
+
+    def leaf_spec(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        name = keys[-1]
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2:
+            if batch_ok:
+                spec[1] = bspec  # (G, B, ...)
+        if name in ("k", "v", "sk", "sv", "ck", "cv"):
+            # (G, B, C, KV, hd). Never shard C when the batch is sharded:
+            # the per-step dynamic-update-slice at a dynamic position on a
+            # sharded axis makes GSPMD gather the whole cache (dry-run
+            # finding). kv-heads over model when divisible, else head_dim
+            # (attention einsums contract hd -> one small psum per step).
+            if shape[3] % msize == 0:
+                spec[3] = "model"
+            elif len(shape) > 4 and shape[4] % msize == 0:
+                spec[4] = "model"
+            if not batch_ok and shape[2] % dsize == 0:
+                # long-context single-request: length must shard somewhere;
+                # the per-write gather transient is C_bytes/dsize — fine
+                spec[2] = bspec
+        elif name == "ssm":
+            # (G, B, H, N, P): heads over model if divisible, else state N
+            if shape[2] % msize == 0:
+                spec[2] = "model"
+            elif shape[3] % msize == 0:
+                spec[3] = "model"
+        elif name == "conv":
+            # (G, B, K-1, conv_dim)
+            if shape[3] % msize == 0:
+                spec[3] = "model"
+        elif name in ("pos", "spos"):
+            pass
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat]
+    )
+
+
+def shard_tree(tree, specs, mesh: Mesh):
+    """Attach NamedShardings: works on concrete arrays and ShapeDtypeStructs."""
+
+    def attach(x, s):
+        sh = NamedSharding(mesh, s)
+        if isinstance(x, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh)
+        return jax.device_put(x, sh)
+
+    return jax.tree.map(attach, tree, specs)

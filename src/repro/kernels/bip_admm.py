@@ -1,0 +1,188 @@
+"""Pallas TPU kernel for the BIP-ADMM dual iteration (the paper's hot loop).
+
+TPU adaptation (DESIGN.md §3): the reference implementation sorts score
+columns per ADMM iteration (torch.topk on GPU). Column-wise sort over n up
+to 10^6 maps badly onto the VPU, so selection is replaced by *histogram
+counting* — which is exactly the paper's own Algorithm 4 approximation, made
+hardware-native:
+
+One kernel invocation = one ADMM iteration over the (n, m) score matrix,
+streamed through VMEM once in n-blocks. Per block it
+  1. computes p_i = max(0, (k+1)-th largest of s_i - q) for its rows by
+     iterative max-extraction over the m lanes (k+1 unrolled VPU passes,
+     tie-broken by index), and
+  2. accumulates per-expert counts of (s_ij - p_i) against n_bins fixed
+     histogram edges spanning [-1, 1] (softmax scores are in [0, 1]) —
+     broadcast compare + reduce, no sort, no scatter.
+
+The (m, n_bins) count matrix persists in the output across the sequential
+TPU grid; the jnp wrapper (ops.py) turns it into
+q_j = max(0, (kn/m+1)-th largest) by locating the rank's bin and
+interpolating — resolution (hi-lo)/n_bins ≈ 0.004 at 512 bins, far below
+any meaningful routing-score gap (validated against the exact oracle in
+tests/test_kernels_bip.py).
+
+Cost model per iteration: reads s once (n·m·4 B), VPU work n·m·(k+1 +
+n_bins) compares — at n=32768, m=128, 512 bins ≈ 2.2 G lane-ops ≈ 0.5 ms on
+a v5e core, ~100x less than a per-column sort.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+LO, HI = -1.0, 1.0  # score domain: softmax/sigmoid scores in [0,1], minus p in [0,1]
+PAD_VALUE = -2.0    # below LO: padded rows never enter any histogram bin
+
+
+def _iteration_kernel(
+    s_ref,      # (blk, m) VMEM block of scores
+    q_ref,      # (m,) current expert prices (replicated to every block)
+    lo_ref,     # (m,) per-expert histogram lower bound
+    hi_ref,     # (m,) per-expert histogram upper bound
+    p_ref,      # (blk,) out: token prices for this block
+    cnt_ref,    # (m, n_bins) out: histogram counts, accumulated over grid
+    *,
+    top_k: int,
+    n_bins: int,
+):
+    blk, m = s_ref.shape
+    x = s_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)[None, :]
+
+    # --- p_i = max(0, (k+1)-th largest of x_i) : k+1 max-extraction passes
+    lane = lax.broadcasted_iota(jnp.int32, (blk, m), 1)
+    active = jnp.ones((blk, m), jnp.bool_)
+    cur = jnp.full((blk,), PAD_VALUE, jnp.float32)
+    for _ in range(top_k + 1):
+        masked = jnp.where(active, x, PAD_VALUE)
+        cur = jnp.max(masked, axis=1)  # (blk,)
+        hit = active & (masked == cur[:, None])
+        first = jnp.min(jnp.where(hit, lane, m), axis=1)  # tie-break by index
+        active = active & (lane != first[:, None])
+    p = jnp.maximum(cur, 0.0)
+    p_ref[...] = p
+
+    # --- histogram of (s - p) per expert over per-expert edge ranges
+    shifted = s_ref[...].astype(jnp.float32) - p[:, None]   # (blk, m)
+    lo = lo_ref[...].astype(jnp.float32)
+    hi = hi_ref[...].astype(jnp.float32)
+    frac = lax.broadcasted_iota(jnp.float32, (n_bins,), 0) / n_bins
+    edges = lo[:, None] + (hi - lo)[:, None] * frac[None, :]  # (m, n_bins)
+    cnt = jnp.sum(
+        (shifted[:, :, None] > edges[None, :, :]).astype(jnp.float32), axis=0
+    )  # (m, n_bins)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    cnt_ref[...] += cnt
+
+
+def bip_admm_iteration(
+    s: jnp.ndarray,  # (n, m) scores in [0, 1]
+    q: jnp.ndarray,  # (m,)
+    *,
+    top_k: int,
+    n_bins: int = 512,
+    block_n: int = 1024,
+    lo=None,          # (m,) per-expert histogram bounds (default [LO, HI))
+    hi=None,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused ADMM iteration. Returns (p (n,), counts (m, n_bins))."""
+    n, m = s.shape
+    if lo is None:
+        lo = jnp.full((m,), LO, jnp.float32)
+    if hi is None:
+        hi = jnp.full((m,), HI, jnp.float32)
+    pad = (-n) % block_n
+    if pad:
+        s = jnp.pad(s, ((0, pad), (0, 0)), constant_values=PAD_VALUE)
+    np_ = s.shape[0]
+    grid = (np_ // block_n,)
+
+    kernel = functools.partial(_iteration_kernel, top_k=top_k, n_bins=n_bins)
+    p, cnt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((m, n_bins), lambda i: (0, 0)),  # accumulated in place
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((m, n_bins), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        s.astype(jnp.float32),
+        q.astype(jnp.float32),
+        lo.astype(jnp.float32),
+        hi.astype(jnp.float32),
+    )
+    return p[:n], cnt
+
+
+def locate_bin(
+    cnt: jnp.ndarray,  # (m, n_bins) counts of (x > edge_b), non-increasing in b
+    rank: int,         # cap index: want the (rank+1)-th largest value
+    n_bins: int,
+    lo: jnp.ndarray,   # (m,) bounds the histogram was built over
+    hi: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bin containing the order statistic. Returns (bin_lo, bin_hi, found).
+
+    The (rank+1)-th largest value v satisfies cnt[b] > rank for edges below v
+    and cnt[b] <= rank at/above it, so v lies in (edge_{b*}, edge_{b*}+Δ]
+    with b* the last edge whose count exceeds rank.
+    """
+    width = (hi - lo) / n_bins  # (m,)
+    above = cnt > rank
+    b_star = jnp.sum(above.astype(jnp.int32), axis=1) - 1  # last True edge
+    b_clip = jnp.clip(b_star, 0, n_bins - 1).astype(jnp.float32)
+    bin_lo = lo + b_clip * width
+    bin_hi = bin_lo + width
+    return bin_lo, bin_hi, b_star >= 0
+
+
+def q_from_histogram(
+    cnt: jnp.ndarray,
+    rank: int,
+    n_bins: int,
+    lo=None,
+    hi=None,
+) -> jnp.ndarray:
+    """q_j = max(0, order statistic) with linear interpolation in its bin."""
+    m = cnt.shape[0]
+    if lo is None:
+        lo = jnp.full((m,), LO, jnp.float32)
+    if hi is None:
+        hi = jnp.full((m,), HI, jnp.float32)
+    width = (hi - lo) / n_bins
+    bin_lo, _, found = locate_bin(cnt, rank, n_bins, lo, hi)
+    b_clip = jnp.clip(
+        jnp.sum((cnt > rank).astype(jnp.int32), axis=1) - 1, 0, n_bins - 1
+    )
+    c_lo = jnp.take_along_axis(cnt, b_clip[:, None], axis=1)[:, 0]
+    c_hi = jnp.where(
+        b_clip + 1 < n_bins,
+        jnp.take_along_axis(
+            cnt, jnp.clip(b_clip + 1, 0, n_bins - 1)[:, None], axis=1
+        )[:, 0],
+        0.0,
+    )
+    frac = (c_lo - rank) / jnp.maximum(c_lo - c_hi, 1.0)
+    v = bin_lo + jnp.clip(frac, 0.0, 1.0) * width
+    return jnp.where(found, jnp.maximum(v, 0.0), 0.0)

@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`bip_dual_update(s, q0, top_k, n_iters)` is a drop-in for the exact oracle in
+repro.core.ref_bip (the router dispatches here when RouterConfig.use_kernel).
+
+interpret=True executes the kernel bodies in Python on CPU (this container);
+on TPU hardware set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) so
+pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ref_bip import expert_kth_index
+from repro.kernels import bip_admm as _bip
+from repro.kernels import moe_gemm as _gemm
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("top_k", "n_iters", "n_bins", "block_n", "refine", "interpret"),
+)
+def bip_dual_update(
+    s: jnp.ndarray,
+    q0: jnp.ndarray,
+    *,
+    top_k: int,
+    n_iters: int,
+    n_bins: int = 512,
+    block_n: int = 1024,
+    refine: int = 1,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """T fused ADMM iterations on the (n, m) score matrix. Returns q (m,).
+
+    Each iteration runs 1 coarse histogram pass over [-1, 1] plus `refine`
+    passes over the located bin (per-expert bounds), so the order-statistic
+    resolution is (2/n_bins)^(refine+1)·… ≈ 8e-6 at the defaults — tighter
+    than fp32 softmax score gaps (validated in tests/test_kernels.py).
+    """
+    n, m = s.shape
+    rank = expert_kth_index(n, top_k, m)
+    if rank < 0:  # capacity slack: constraint never binds
+        return jnp.zeros_like(q0)
+
+    def body(_, q):
+        lo = jnp.full((m,), _bip.LO, jnp.float32)
+        hi = jnp.full((m,), _bip.HI, jnp.float32)
+        for _pass in range(refine + 1):
+            _p, cnt = _bip.bip_admm_iteration(
+                s, q, top_k=top_k, n_bins=n_bins, block_n=block_n,
+                lo=lo, hi=hi, interpret=interpret,
+            )
+            cur_lo, cur_hi = lo, hi  # bounds this cnt was computed over
+            bin_lo, bin_hi, found = _bip.locate_bin(cnt, rank, n_bins, lo, hi)
+            lo = jnp.where(found, bin_lo, lo)
+            hi = jnp.where(found, bin_hi, hi)
+        return _bip.q_from_histogram(cnt, rank, n_bins, lo=cur_lo, hi=cur_hi)
+
+    # inherit s's varying-manual-axes type for the loop carry (shard_map)
+    q_init = q0.astype(jnp.float32) + 0.0 * s[0].astype(jnp.float32)
+    return lax.fori_loop(0, n_iters, body, q_init)
+
+
+def expert_ffn(x, w_gate, w_up, w_down, *, interpret: bool = None, **block_kw):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gemm.expert_ffn(
+        x, w_gate, w_up, w_down, interpret=interpret, **block_kw
+    )
+
+
+def grouped_matmul(h, w, *, interpret: bool = None, **block_kw):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gemm.grouped_matmul(h, w, interpret=interpret, **block_kw)
+
+
+def grouped_gated_ffn_in(x, wg, wu, *, interpret: bool = None, **block_kw):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _gemm.grouped_gated_ffn_in(x, wg, wu, interpret=interpret, **block_kw)

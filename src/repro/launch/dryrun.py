@@ -1,0 +1,377 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+Proves the distribution config is coherent without TPU hardware: jax builds
+the 256-chip (single-pod) and 512-chip (multi-pod) meshes from placeholder
+host devices, GSPMD partitions the full train/prefill/decode programs, and
+the compiled artifact yields memory_analysis() (fits/doesn't fit) and
+cost_analysis() (FLOPs/bytes for the roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b \
+        --shape train_4k [--multi-pod] [--micro N] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+# The placeholder-device flag MUST precede any jax initialization — jax locks
+# the device count on first init. Do NOT set this in conftest/pyproject.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data.synthetic import INPUT_SHAPES, InputShape, input_specs
+from repro.distributed import (
+    batch_specs,
+    cache_specs,
+    make_mesh_ctx,
+    param_specs,
+    router_state_specs,
+    train_state_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import adamw as _adamw
+from repro.optim.schedules import constant
+from repro.training.loop import TrainState, init_train_state, make_train_step
+
+# -------------------------------------------------------- applicability
+
+# long_500k needs sub-quadratic attention / bounded state (DESIGN.md §Skips)
+LONG_CONTEXT_ARCHS = {"mamba2_130m", "zamba2_7b", "llama4_scout_17b_a16e", "gemma2_27b"}
+
+
+def shape_applicable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def valid_pairs():
+    for arch in configs.ARCH_IDS[:10]:  # the 10 assigned archs
+        for shape_name in INPUT_SHAPES:
+            if shape_applicable(arch, shape_name):
+                yield arch, shape_name
+
+
+# ------------------------------------------------------------- programs
+
+
+def _grad_accum_train_step(model, cfg, opt_cfg, microbatches: int):
+    """Train step with sequential microbatch gradient accumulation."""
+
+    base = make_train_step(model, opt_cfg, constant(3e-4))
+    if microbatches <= 1:
+        return base
+
+    def step(state: TrainState, batch):
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                b,
+            )
+
+        mb = micro(batch)
+
+        # accumulate in the parameter dtype: fp32 accumulation doubles the
+        # carry footprint for bf16-param models (arctic) with negligible
+        # benefit at <=16 microbatches
+        acc_dt = cfg.param_dtype
+
+        def body(carry, one):
+            grads_acc, router = carry
+            (loss, (router, mets)), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True
+            )(state.params, one, router)
+            grads_acc = jax.tree.map(
+                lambda a, g: (a + g.astype(acc_dt)), grads_acc, grads
+            )
+            return (grads_acc, router), (loss, mets)
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt), state.params
+        )
+        (grads, router), (losses, mets) = jax.lax.scan(
+            body, (zero, state.router_states), mb
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        lr = constant(3e-4)(state.opt_state["step"].astype(jnp.float32))
+        new_params, new_opt, info = _adamw.adamw_update(
+            grads, state.opt_state, state.params, lr, opt_cfg
+        )
+        out_mets = {"loss": losses.mean(), **info}
+        return (
+            TrainState(params=new_params, opt_state=new_opt, router_states=router),
+            out_mets,
+        )
+
+    return step
+
+
+def _sds(tree):
+    """eval_shape on a thunk returning the tree (no allocation)."""
+    return jax.eval_shape(lambda: tree) if not callable(tree) else jax.eval_shape(tree)
+
+
+def _attach(tree, specs, mesh):
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+        tree,
+        specs,
+    )
+
+
+# ------------------------------------------------------------ dry runs
+
+
+def lower_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    microbatches: Optional[int] = None,
+    mesh=None,
+    extra_cfg: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh). Returns analysis record."""
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = dataclasses.replace(cfg, remat="block", **(extra_cfg or {}))
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_ctx = make_mesh_ctx(mesh)
+    model = build_model(cfg, mesh_ctx)
+    opt_cfg = _adamw.from_model_config(cfg)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    if microbatches is None:
+        microbatches = 1
+        if shape.kind == "train":
+            # size microbatches so the remat residual stack fits comfortably:
+            # residuals/device = tokens_dev_micro * d_model * 2B * n_layers
+            data_sh = n_chips // mesh.shape["model"]
+            seq_total = shape.seq_len + cfg.enc_seq_len  # encdec: enc tokens too
+            tokens_dev = seq_total * shape.global_batch // data_sh
+            # encdec pays cross-attention + encoder transients per microbatch
+            budget = (1 if cfg.n_enc_layers else 2) * 2**30
+            per_tok = cfg.d_model * 2 * max(cfg.n_layers + cfg.n_enc_layers, 1)
+            want = max(1, int(np.ceil(tokens_dev * per_tok / budget)))
+            seqs_dev = max(shape.global_batch // data_sh, 1)
+            # round up to a divisor of the per-device sequence count
+            microbatches = next(
+                m for m in range(want, seqs_dev + 1) if seqs_dev % m == 0
+            ) if want <= seqs_dev else seqs_dev
+
+    t0 = time.time()
+    specs_in = input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            state_sds = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+            )
+            st_specs = train_state_specs(state_sds, cfg, mesh)
+            b_specs = batch_specs(cfg, mesh, shape.global_batch)
+            b_specs = {k: b_specs[k] for k in specs_in}
+            step = _grad_accum_train_step(model, cfg, opt_cfg, microbatches)
+            fn = jax.jit(
+                step,
+                in_shardings=(
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs),
+                    {k: NamedSharding(mesh, v) for k, v in b_specs.items()},
+                ),
+                out_shardings=(
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs),
+                    None,
+                ),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(state_sds, specs_in)
+        elif shape.kind == "prefill":
+            params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            router_sds = jax.eval_shape(model.init_router_states)
+            p_specs = param_specs(params_sds, cfg, mesh)
+            b_specs = batch_specs(cfg, mesh, shape.global_batch)
+            b_specs = {k: b_specs[k] for k in specs_in}
+
+            def prefill(params, batch, router):
+                logits, new_states, mets = model.prefill(
+                    params, batch, router, shape.seq_len
+                )
+                return logits, new_states
+
+            fn = jax.jit(
+                prefill,
+                in_shardings=(
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+                    {k: NamedSharding(mesh, v) for k, v in b_specs.items()},
+                    jax.tree.map(
+                        lambda s: NamedSharding(mesh, s),
+                        router_state_specs(router_sds),
+                    ),
+                ),
+            )
+            lowered = fn.lower(params_sds, specs_in, router_sds)
+        else:  # decode
+            params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            router_sds = jax.eval_shape(model.init_router_states)
+            p_specs = param_specs(params_sds, cfg, mesh)
+            cache_batch = dict(specs_in)
+            cache_sds = jax.eval_shape(
+                lambda p, b: model.init_cache(p, b, shape.seq_len),
+                params_sds,
+                cache_batch,
+            )
+            c_specs = cache_specs(cache_sds, cfg, mesh, shape.global_batch)
+            b_sp = batch_specs(cfg, mesh, shape.global_batch)["tokens"]
+
+            def decode(params, tokens, cache, router):
+                return model.decode_step(params, tokens, cache, router)
+
+            fn = jax.jit(
+                decode,
+                in_shardings=(
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+                    NamedSharding(mesh, b_sp),
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs),
+                    jax.tree.map(
+                        lambda s: NamedSharding(mesh, s),
+                        router_state_specs(router_sds),
+                    ),
+                ),
+                out_shardings=(
+                    None,
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs),
+                    jax.tree.map(
+                        lambda s: NamedSharding(mesh, s),
+                        router_state_specs(router_sds),
+                    ),
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(
+                params_sds, specs_in["tokens"], cache_sds, router_sds
+            )
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    # Loop-aware per-device costs (XLA's cost_analysis counts while bodies
+    # once — see repro.launch.hlo_cost).
+    from repro.launch.hlo_cost import (
+        analyze_compiled,
+        cpu_bf16_upcast_bytes,
+        cpu_bf16_upcast_carried_bytes,
+    )
+
+    t0 = time.time()
+    hlo_txt = compiled.as_text()
+    cost = analyze_compiled(compiled)
+    upcast = cpu_bf16_upcast_bytes(hlo_txt) + cpu_bf16_upcast_carried_bytes(hlo_txt)
+    t_analyze = time.time() - t0
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "microbatches": microbatches,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "analyze_s": round(t_analyze, 1),
+        "flops": cost.flops,
+        "traffic_bytes": cost.traffic,
+        "collective_bytes": {**cost.collectives, "total": cost.collective_total},
+        "xla_flops_looponce": xla_cost.get("flops", float("nan")),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        ),
+        # CPU-backend artifact: f32 copies inserted to legalize bf16 dots
+        # (hoisted whole-stack converts). TPU executes bf16 dots natively;
+        # peak_bytes_tpu removes them (see hlo_cost.cpu_bf16_upcast_bytes).
+        "cpu_upcast_bytes": upcast,
+        # clamped below by argument bytes: the upcast detector can overlap
+        # with buffers XLA aliased away
+        "peak_bytes_tpu": max(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+            - upcast,
+            getattr(mem, "argument_size_in_bytes", 0),
+        ),
+    }
+    return rec
+
+
+# ----------------------------------------------------------------- main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default="train_4k", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.all:
+        pairs = list(valid_pairs())
+    else:
+        assert args.arch, "--arch required unless --all"
+        pairs = [(args.arch, args.shape)]
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    for arch, shape_name in pairs:
+        print(f"== dryrun {arch} x {shape_name} "
+              f"({'2x16x16' if args.multi_pod else '16x16'}) ==", flush=True)
+        try:
+            rec = lower_one(
+                arch, shape_name,
+                multi_pod=args.multi_pod, microbatches=args.micro, mesh=mesh,
+            )
+            rec["status"] = "ok"
+            print(json.dumps(rec), flush=True)
+        except Exception as e:  # noqa: BLE001 — a failure IS the result
+            rec = {
+                "arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if args.multi_pod else "16x16",
+                "status": f"FAIL: {type(e).__name__}: {str(e)[:400]}",
+            }
+            print(json.dumps(rec), flush=True)
+        results.append(rec)
+
+    if args.out:
+        mode = "a" if os.path.exists(args.out) else "w"
+        with open(args.out, mode) as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{n_ok}/{len(results)} combinations compiled", flush=True)
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,364 @@
+"""Loop-aware HLO cost model (the dry-run "profiler").
+
+XLA's built-in compiled.cost_analysis() counts while-loop bodies ONCE —
+useless for scan-over-layers / microbatch-accumulation programs where >99%
+of the work sits inside loops. This module parses compiled.as_text()
+(post-SPMD optimized HLO, i.e. exactly what each device executes) into a
+call graph and accumulates costs with loop trip counts taken from XLA's own
+`backend_config={"known_trip_count":{"n":...}}` annotations:
+
+  flops             2·prod(out_shape)·K for every dot (K = contracted size),
+                    recursively through fusions/calls/while bodies.
+  traffic_bytes     HBM traffic model: Σ over *top-level* ops per executed
+                    computation of (operand bytes + result bytes) for
+                    fusion / dot / copy / dynamic-update-slice / gather /
+                    scatter kernels — one read per input, one write per
+                    output per kernel launch, the standard fusion-boundary
+                    traffic model.
+  collectives       result bytes per collective kind (all-gather,
+                    all-reduce, reduce-scatter, all-to-all,
+                    collective-permute), trip-count multiplied.
+
+Validated against XLA's own numbers on loop-free programs (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9].*?)\s([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_PARAM_RE = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*(\(?[a-z0-9][^\s]*)\sparameter\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, str]  # name -> type_str (includes parameters)
+
+
+def parse_hlo(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.endswith("{"):
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        pm = _PARAM_RE.match(line)
+        if pm:
+            cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, type_str, opcode = dm.group(1), dm.group(2), dm.group(3)
+            cur.symbols[name] = type_str
+            cur.ops.append(Op(name, type_str, opcode, line))
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    dims = _first_shape_dims(op.type_str)
+    for d in dims:
+        out_elems *= d
+    # contracted size: product of lhs contracting dims
+    cm = _CONTRACT_RE.search(op.line)
+    k = 1
+    if cm is not None:
+        # first operand name
+        om = re.search(r"\b" + re.escape(op.opcode) + r"\(%?([\w.\-]+)", op.line)
+        if om:
+            lhs_type = comp.symbols.get(om.group(1), "")
+            lhs_dims = _first_shape_dims(lhs_type)
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _operand_names(op: Op) -> List[str]:
+    m = re.search(re.escape(op.opcode) + r"\((.*)", op.line)
+    if not m:
+        return []
+    depth, buf, names = 0, "", []
+    for ch in m.group(1):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            names.append(buf.strip())
+            buf = ""
+        else:
+            buf += ch
+    if buf.strip():
+        names.append(buf.strip())
+    return [n.lstrip("%") for n in names if n.strip().startswith("%")]
+
+
+_TRAFFIC_OPS = {
+    "fusion", "dot", "copy", "dynamic-update-slice", "gather", "scatter",
+    "convolution", "transpose", "reduce", "broadcast", "iota", "concatenate",
+    "slice", "dynamic-slice", "pad", "reshape", "bitcast", "select",
+    "custom-call", "rng-bit-generator", "sort", "convert", "compare",
+    "add", "multiply", "subtract", "divide", "exponential", "tanh", "log",
+    "maximum", "minimum", "cholesky", "triangular-solve",
+}
+# ops whose cost is attributed elsewhere or zero
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "while",
+    "conditional", "call", "bitcast", "reshape", "after-all",
+    "partition-id", "replica-id",
+}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o: "Cost") -> "Cost":
+        coll = dict(self.collectives)
+        for k, v in o.collectives.items():
+            coll[k] = coll.get(k, 0.0) + v
+        return Cost(self.flops + o.flops, self.traffic + o.traffic, coll)
+
+    def __mul__(self, f: float) -> "Cost":
+        return Cost(
+            self.flops * f,
+            self.traffic * f,
+            {k: v * f for k, v in self.collectives.items()},
+        )
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+def analyze(txt: str) -> Cost:
+    comps = parse_hlo(txt)
+    memo: Dict[str, Cost] = {}
+    fusion_flops_memo: Dict[str, float] = {}
+
+    def fusion_flops(comp_name: str) -> float:
+        """dots hiding inside fusion bodies (flops only; traffic is at the
+        fusion boundary)."""
+        if comp_name in fusion_flops_memo:
+            return fusion_flops_memo[comp_name]
+        comp = comps.get(comp_name)
+        total = 0.0
+        if comp:
+            for op in comp.ops:
+                if op.opcode in ("dot", "convolution"):
+                    total += _dot_flops(op, comp)
+                cm = _CALLS_RE.search(op.line)
+                if cm and op.opcode == "fusion":
+                    total += fusion_flops(cm.group(1))
+        fusion_flops_memo[comp_name] = total
+        return total
+
+    def comp_cost(comp_name: str) -> Cost:
+        if comp_name in memo:
+            return memo[comp_name]
+        comp = comps.get(comp_name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        for op in comp.ops:
+            base = op.opcode
+            if base.endswith("-start"):
+                base = base[: -len("-start")]
+            if base in COLLECTIVE_OPS:
+                nbytes = float(_shape_bytes(op.type_str))
+                total = total + Cost(collectives={base: nbytes}, traffic=nbytes)
+                continue
+            if op.opcode.endswith("-done"):
+                continue
+            if op.opcode == "while":
+                cb = _COND_BODY_RE.search(op.line)
+                tm = _TRIP_RE.search(op.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                if cb:
+                    total = total + comp_cost(cb.group(2)) * trips
+                    total = total + comp_cost(cb.group(1)) * (trips + 1)
+                continue
+            if op.opcode in ("call", "conditional", "async-start"):
+                for cname in _CALLS_RE.findall(op.line):
+                    total = total + comp_cost(cname)
+                continue
+            if op.opcode == "fusion":
+                nbytes = float(_shape_bytes(op.type_str))
+                for operand in _operand_names(op):
+                    nbytes += float(_shape_bytes(comp.symbols.get(operand, "")))
+                fl = 0.0
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    fl = fusion_flops(cm.group(1))
+                total = total + Cost(flops=fl, traffic=nbytes)
+                continue
+            if op.opcode in ("dot", "convolution"):
+                nbytes = float(_shape_bytes(op.type_str))
+                for operand in _operand_names(op):
+                    nbytes += float(_shape_bytes(comp.symbols.get(operand, "")))
+                total = total + Cost(flops=_dot_flops(op, comp), traffic=nbytes)
+                continue
+            if op.opcode in _SKIP_TRAFFIC:
+                continue
+            if op.opcode in _TRAFFIC_OPS:
+                nbytes = float(_shape_bytes(op.type_str))
+                for operand in _operand_names(op):
+                    nbytes += float(_shape_bytes(comp.symbols.get(operand, "")))
+                total = total + Cost(traffic=nbytes)
+        memo[comp_name] = total
+        return total
+
+    return comp_cost(comps["__entry__"].name if "__entry__" in comps else next(iter(comps)))
+
+
+def analyze_compiled(compiled) -> Cost:
+    return analyze(compiled.as_text())
+
+
+def cpu_bf16_upcast_bytes(txt: str, min_bytes: int = 1 << 25) -> float:
+    """Bytes of f32 copies the CPU backend materializes to legalize bf16 dots.
+
+    XLA:CPU has no native bf16 dot: it inserts convert(bf16->f32) on the
+    operands, and loop-invariant-code-motion hoists the conversion of whole
+    scan-stacked weight/KV tensors out of the layer loop — ballooning the
+    temp allocation by ~2x of every bf16 tensor touched by a matmul. TPU
+    executes bf16 dots natively and never materializes these buffers, so the
+    dry-run memory analysis reports peak both raw and with these (entry-
+    level, >=32 MiB) conversion buffers removed. Methodology documented in
+    EXPERIMENTS.md §Dry-run.
+    """
+    comps = parse_hlo(txt)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return 0.0
+    total = 0.0
+    for op in entry.ops:
+        if not op.type_str.startswith("f32["):
+            continue
+        is_convert = op.opcode == "convert" or (
+            op.opcode == "fusion" and "wrapped_convert" in op.line
+        )
+        if not is_convert:
+            continue
+        nbytes = _shape_bytes(op.type_str)
+        if nbytes < min_bytes:
+            continue
+        operands = _operand_names(op)
+        if operands:
+            src_type = entry.symbols.get(operands[0], "")
+            if src_type.startswith("bf16[") and _first_shape_dims(
+                src_type
+            ) == _first_shape_dims(op.type_str):
+                total += nbytes
+    return total
+
+
+def cpu_bf16_upcast_carried_bytes(txt: str, min_bytes: int = 1 << 25) -> float:
+    """Extension of cpu_bf16_upcast_bytes: f32 while-loop carries whose dims
+    exactly match a bf16 ENTRY PARAMETER (weights converted once and carried
+    through the layer/microbatch loops). Only applies to bf16-at-rest
+    models; on TPU these conversions never materialize."""
+    comps = parse_hlo(txt)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return 0.0
+    bf16_param_dims = set()
+    for name, t in entry.symbols.items():
+        if t.startswith("bf16["):
+            dims = tuple(_first_shape_dims(t))
+            if dims:
+                bf16_param_dims.add(dims)
+    # distinct physical buffers: one converted copy for the forward loop and
+    # one for the backward loop (verified against the buffer-assignment dump
+    # for arctic-480b); further while ops share those buffers, so cap the
+    # count per shape at 2.
+    counts = {}
+    total = 0.0
+    for op in entry.ops:
+        if op.opcode != "while":
+            continue
+        seen_this_while = set()
+        for m in _SHAPE_RE.finditer(op.type_str):
+            if m.group(1) != "f32" or not m.group(2):
+                continue
+            dims = tuple(int(d) for d in m.group(2).split(",") if d)
+            n = 1
+            for d in dims:
+                n *= d
+            nbytes = n * 4
+            if nbytes < min_bytes or dims not in bf16_param_dims:
+                continue
+            if dims in seen_this_while:
+                continue
+            seen_this_while.add(dims)
+            if counts.get(dims, 0) < 2:
+                counts[dims] = counts.get(dims, 0) + 1
+                total += nbytes
+    return total

@@ -1,0 +1,36 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax initialization and only
+then calls make_production_mesh().
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips (one v5e pod) or 2x16x16 = 512 chips (two pods).
+
+    Axes: 'pod' spans the inter-pod DCN/ICI boundary, 'data' carries batch
+    (+ FSDP weight shards), 'model' carries tensor/expert parallelism.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis (benchmarks/).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per chip per direction)
+HBM_BYTES = 16 * 1024**3      # 16 GiB per chip

@@ -1,0 +1,100 @@
+"""Training launcher.
+
+Local (CPU / small mesh):
+    PYTHONPATH=src python -m repro.launch.train --arch minimind-moe-16e \
+        --steps 200 --batch 8 --seq-len 128 [--method bip|lossfree|aux_loss]
+
+Production (TPU pod; one process per host, standard jax.distributed):
+    python -m repro.launch.train --arch llama4-scout-17b-a16e --production \
+        --coordinator $COORD --num-hosts $N --host-id $ID
+
+The production path builds the 16x16 (or 2x16x16 with --multi-pod) mesh and
+the same sharded train step the dry-run compiles; on this CPU container it
+is exercised via repro.launch.dryrun instead.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--method", default=None, choices=[None, "bip", "lossfree", "aux_loss", "topk"])
+    ap.add_argument("--bip-iters", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke-scale) variant of --arch")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    # production flags
+    ap.add_argument("--production", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.production and args.coordinator:
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_hosts,
+            process_id=args.host_id,
+        )
+
+    from repro import configs
+    from repro.data import make_batches
+    from repro.models import build_model
+    from repro.training import train_loop
+    from repro.training.loop import evaluate_ppl
+
+    cfg = configs.reduced_for_smoke(args.arch) if args.reduced else configs.get(args.arch)
+    if args.method or args.bip_iters:
+        routing = dataclasses.replace(
+            cfg.routing,
+            strategy=args.method or cfg.routing.strategy,
+            bip_iters=args.bip_iters or cfg.routing.bip_iters,
+        )
+        cfg = dataclasses.replace(cfg, routing=routing)
+
+    mesh_ctx = None
+    if args.production:
+        from repro.distributed import make_mesh_ctx
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh_ctx = make_mesh_ctx(mesh)
+        model = build_model(cfg, mesh_ctx)
+    else:
+        model = build_model(cfg)
+
+    print(f"training {cfg.name} [{cfg.family}] method={cfg.routing.strategy if cfg.is_moe else 'n/a'}")
+    batches = make_batches(cfg, args.batch, args.seq_len, args.steps)
+    state, log = train_loop(
+        model, batches, lr=args.lr, total_steps=args.steps, log_every=args.log_every
+    )
+    test = make_batches(cfg, args.batch, args.seq_len, 4, split="test")
+    ppl = evaluate_ppl(model, state, test)
+    summary = {**log.summary(), "test_ppl": ppl}
+    print(json.dumps(summary, indent=1, default=float))
+
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+
+        CheckpointManager(args.ckpt_dir).save(
+            args.steps, {"params": state.params, "router": state.router_states}
+        )
+        print(f"checkpoint -> {args.ckpt_dir}/step_{args.steps}.npz")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

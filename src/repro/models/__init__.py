@@ -1,0 +1,5 @@
+"""repro.models — composable model zoo (dense / moe / ssm / hybrid / encdec / vlm)."""
+from repro.models.model import Model, build_model
+from repro.models.stack import MeshCtx
+
+__all__ = ["Model", "MeshCtx", "build_model"]

@@ -1,0 +1,342 @@
+"""Shared model primitives: norms, RoPE, GQA attention (global / sliding
+window / logit softcap), gated MLPs, embeddings.
+
+All modules are functional: `init_*(key, cfg, ...) -> params pytree` and
+`apply(params, x, ...) -> y`. Parameters are plain dicts of jnp arrays so
+they stack cleanly under vmap for lax.scan-over-layers.
+
+Attention is memory-tiled: queries are processed in chunks of cfg.attn_chunk
+via lax.scan so the (S, S) score matrix is never materialized — per chunk the
+footprint is (B, H, chunk, S), which keeps 32k-token prefill inside HBM on the
+production mesh (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -2.0e38  # large-negative fill that survives bf16 casts
+
+
+# ------------------------------------------------------------------ norms
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ------------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (.., S, 1, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, h, hd), cfg.param_dtype) * scale,
+        "wk": jax.random.normal(k2, (d, kv, hd), cfg.param_dtype) * scale,
+        "wv": jax.random.normal(k3, (d, kv, hd), cfg.param_dtype) * scale,
+        "wo": jax.random.normal(k4, (h, hd, d), cfg.param_dtype)
+        * (scale / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, cfg.param_dtype)
+        p["k_norm"] = init_rmsnorm(hd, cfg.param_dtype)
+    return p
+
+
+def _attn_weights(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, KV, D)
+    mask: jnp.ndarray,  # (B, 1|H, Sq, Sk) bool
+    softcap: float,
+) -> jnp.ndarray:
+    groups = q.shape[2] // k.shape[2]
+    kq = jnp.repeat(k, groups, axis=2)  # (B, Sk, H, D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kq).astype(jnp.float32)
+    logits = logits / math.sqrt(q.shape[-1])
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen for padded chunks): zero them out
+    w = jnp.where(mask.any(axis=-1, keepdims=True), w, 0.0)
+    return w
+
+
+def _attend(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mask: jnp.ndarray,
+    softcap: float,
+    compute_dtype,
+) -> jnp.ndarray:
+    w = _attn_weights(q, k, mask, softcap)
+    groups = q.shape[2] // v.shape[2]
+    vq = jnp.repeat(v, groups, axis=2)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(compute_dtype), vq)
+
+
+def causal_window_mask(
+    q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: int
+) -> jnp.ndarray:
+    """(…, Sq, Sk) bool. window=0 -> plain causal; else sliding window."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = diff >= 0
+    if window > 0:
+        mask &= diff < window
+    return mask
+
+
+def attention(
+    params: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    layer_kind: str = "global",  # 'global' | 'local'
+    positions: Optional[jnp.ndarray] = None,
+    mesh_ctx=None,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Training / prefill attention with two memory-bounded layouts.
+
+    * heads % model_axis == 0 (or no mesh): Megatron layout — heads shard
+      over 'model'; queries are processed in chunks via lax.scan so only one
+      (chunk, S) score block lives at a time.
+    * otherwise: SEQUENCE-parallel layout — the query axis shards over
+      'model' (K/V replicated; exact since each query row is independent).
+      No scan: the sharded score block (B, H, S/model, S) is the working set.
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    theta = cfg.rope_theta
+    window = 0
+    if layer_kind == "local":
+        window = cfg.window_size
+        if cfg.rope_local_theta:
+            theta = cfg.rope_local_theta
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cfg.compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cfg.compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cfg.compute_dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.rms_norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.rms_norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+
+    msize = 0
+    if mesh_ctx is not None and getattr(mesh_ctx, "mesh", None) is not None:
+        msize = mesh_ctx.mesh.shape[mesh_ctx.model_axis] if mesh_ctx.model_axis else 0
+    # Megatron layout when heads divide the model axis; otherwise SEQUENCE
+    # parallelism: the positions *within each query chunk* shard over
+    # 'model' (K/V replicated — exact, since query rows are independent).
+    seq_parallel = msize > 1 and cfg.n_heads % msize != 0
+    bspec = mesh_ctx.batch_spec if msize else None
+
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk != 0:  # pad the query axis up to a chunk multiple
+        pad = chunk - s % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    else:
+        pad = 0
+        qpos = positions
+    n_chunks = q.shape[1] // chunk
+    qc = q.reshape(b, n_chunks, chunk, cfg.n_heads, hd)
+    pc = jnp.broadcast_to(qpos, (b, qpos.shape[-1])).reshape(b, n_chunks, chunk)
+    if msize:
+        if seq_parallel:
+            qc = mesh_ctx.constrain(qc, bspec, None, "model", None, None)
+        else:
+            qc = mesh_ctx.constrain(qc, bspec, None, None, "model", None)
+
+    def body(carry, inp):
+        qi, pi = inp  # (B, chunk, H, D), (B, chunk)
+        if causal:
+            mask = causal_window_mask(pi, positions, window)[:, None]  # (B,1,c,S)
+        else:
+            mask = (pi >= 0)[:, None, :, None] & jnp.ones((1, 1, 1, s), bool)
+        yi = _attend(qi, k, v, mask, cfg.attn_logit_softcap, cfg.compute_dtype)
+        return carry, yi
+
+    _, ys = lax.scan(body, None, (qc.swapaxes(0, 1), pc.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, cfg.n_heads, hd)
+    if pad:
+        y = y[:, :s]
+    return jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(cfg.compute_dtype))
+
+
+def attention_decode(
+    params: Params,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    layer_kind: str = "global",
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step against a KV cache.
+
+    Cache layout: {'k': (B, C, KV, D), 'v': same, 'pos': (B,) int32 next
+    position}. For local layers C == window_size and the cache is a ring
+    buffer (position modulo window); for global layers C == max_seq_len.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    theta = cfg.rope_theta
+    window = 0
+    if layer_kind == "local":
+        window = cfg.window_size
+        if cfg.rope_local_theta:
+            theta = cfg.rope_local_theta
+
+    pos = cache["pos"]  # (B,)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cfg.compute_dtype))
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cfg.compute_dtype))
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cfg.compute_dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.rms_norm_eps)
+        k_new = rmsnorm(params["k_norm"], k_new, cfg.rms_norm_eps)
+    q = apply_rope(q, pos[:, None], theta)
+    k_new = apply_rope(k_new, pos[:, None], theta)
+
+    cap = cache["k"].shape[1]
+    slot = pos % cap if window > 0 else pos  # ring buffer for local layers
+    k = jax.vmap(lambda c, n, i: lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+        cache["k"], k_new.astype(cache["k"].dtype), slot
+    )
+    v = jax.vmap(lambda c, n, i: lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+        cache["v"], v_new.astype(cache["v"].dtype), slot
+    )
+
+    # key positions: for a ring buffer, slot t holds absolute position
+    # floor((pos - 1 - t') ...); reconstruct directly instead:
+    idx = jnp.arange(cap)[None, :]  # (1, C)
+    if window > 0:
+        # slot i holds the latest absolute position p with p % cap == i, p <= pos
+        k_pos = pos[:, None] - ((pos[:, None] - idx) % cap)
+        valid = (k_pos >= 0) & (k_pos > pos[:, None] - window) & (k_pos <= pos[:, None])
+    else:
+        k_pos = idx
+        valid = idx <= pos[:, None]
+    mask = valid[:, None, None, :]  # (B, 1, 1, C)
+
+    y = _attend(q, k, v.astype(cfg.compute_dtype), mask, cfg.attn_logit_softcap, cfg.compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(cfg.compute_dtype))
+    return out, {"k": k, "v": v, "pos": pos + 1}
+
+
+def init_attention_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, layer_kind: str, dtype
+) -> Dict[str, jnp.ndarray]:
+    cap = min(cfg.window_size, seq_len) if layer_kind == "local" else seq_len
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cap, kv, hd), dtype),
+        "v": jnp.zeros((batch, cap, kv, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# -------------------------------------------------------------------- mlp
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), cfg.param_dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d, f), cfg.param_dtype) * s_in,
+        "w_down": jax.random.normal(k3, (f, d), cfg.param_dtype)
+        * (s_out / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlp(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(cfg.compute_dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(cfg.compute_dtype))
+    return jnp.einsum(
+        "...f,fd->...d", act(g) * u, params["w_down"].astype(cfg.compute_dtype)
+    )
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    p = {
+        "tok": jax.random.normal(
+            key, (cfg.vocab_size, cfg.d_model), cfg.param_dtype
+        )
+        * (1.0 / math.sqrt(cfg.d_model))
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = (
+            jax.random.normal(
+                jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size), cfg.param_dtype
+            )
+            / math.sqrt(cfg.d_model)
+        )
+    return p
+
+
+def embed(params: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return params["tok"].astype(cfg.compute_dtype)[tokens]
+
+
+def unembed(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "...d,vd->...v", x, params["tok"].astype(cfg.compute_dtype)
+        )
+    else:
+        logits = jnp.einsum(
+            "...d,dv->...v", x, params["unembed"].astype(cfg.compute_dtype)
+        )
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,317 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060], pure JAX.
+
+The selective state-space recurrence per head h with state size N, head dim P:
+
+    S_t = exp(dt_t·A_h) · S_{t-1} + B_t ⊗ (dt_t·x_t)      S in R^{N x P}
+    y_t = C_t · S_t + D_h · x_t
+
+with A_h < 0 learned scalar per head (the SSD restriction), B_t, C_t in R^N
+shared across heads within a group, dt_t > 0 per head via softplus.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of Q steps the
+output is a masked quadratic form (attention-like, MXU-friendly); across
+chunks a lax.scan carries the (H, N, P) state:
+
+    y_t = exp(cs_t)·(C_t · S_in)                                [inter-chunk]
+        + Σ_{u<=t} exp(cs_t - cs_u)·(C_t·B_u)·(dt_u x_u)        [intra-chunk]
+    S_out = exp(cs_Q)·S_in + Σ_u exp(cs_Q - cs_u)·B_u ⊗ (dt_u x_u)
+
+where cs is the within-chunk cumulative log-decay (always <= 0, so every exp
+is <= 1: numerically safe in bf16/fp32).
+
+Decode keeps S explicitly and advances one step (attention-free decode — this
+is why SSM/hybrid archs run the 500k-token shape).
+
+Block layout follows the Mamba2 reference: in_proj -> [z | x | B | C | dt],
+short depthwise causal conv over (x,B,C), SSD core, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    return {
+        "d_inner": d_inner,
+        "n_heads": n_heads,
+        "head_dim": cfg.ssm.head_dim,
+        "d_state": cfg.ssm.d_state,
+        "n_groups": cfg.ssm.n_groups,
+        "d_conv": cfg.ssm.d_conv,
+        "conv_dim": d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state,
+    }
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    dm = dims(cfg)
+    d = cfg.d_model
+    di, nh = dm["d_inner"], dm["n_heads"]
+    d_in_proj = 2 * di + 2 * dm["n_groups"] * dm["d_state"] + nh
+    keys = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(keys[0], (d, d_in_proj), cfg.param_dtype) * s,
+        "conv_w": jax.random.normal(
+            keys[1], (dm["d_conv"], dm["conv_dim"]), cfg.param_dtype
+        )
+        * 0.5,
+        "conv_b": jnp.zeros((dm["conv_dim"],), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": jax.random.normal(keys[2], (di, d), cfg.param_dtype)
+        * (1.0 / math.sqrt(di) / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _split_proj(zxbcdt: jnp.ndarray, dm: Dict[str, int]):
+    di, ns, ng = dm["d_inner"], dm["d_state"], dm["n_groups"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + dm["conv_dim"] - 0]
+    # conv input = [x | B | C]
+    dt = zxbcdt[..., di + di + 2 * ng * ns :]
+    return z, xbc, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+# ---------------------------------------------------------------- SSD core
+
+
+def ssd_reference(x, dt, a_log, b, c, d_skip, init_state=None):
+    """Naive per-step recurrence — the oracle for tests.
+
+    x: (B,S,H,P)  dt: (B,S,H)  a_log: (H,)  b,c: (B,S,G,N)  d_skip: (H,)
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log)
+    state = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((bsz, h, n, p), jnp.float32)
+    )
+    bs = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cs = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        decay = jnp.exp(dtt * a[None, :])[..., None, None]  # (B,H,1,1)
+        st = st * decay + bt[..., None] * (dtt[..., None] * xt)[..., None, :]
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, st)
+        return st, yt
+
+    st, ys = lax.scan(
+        step,
+        state,
+        (
+            x32.swapaxes(0, 1),
+            dt32.swapaxes(0, 1),
+            bs.swapaxes(0, 1),
+            cs.swapaxes(0, 1),
+        ),
+    )
+    y = ys.swapaxes(0, 1) + x32 * d_skip[None, None, :, None]
+    return y.astype(x.dtype), st
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a_log: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    d_skip: jnp.ndarray,
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Same contract as ssd_reference, O(S·Q) not O(S²)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity step
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    la = dt.astype(jnp.float32) * a[None, None, :]          # (B,S,H) log-decay
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    lac = la.reshape(bsz, nc, chunk, h)
+    bc = jnp.repeat(b, rep, axis=2).astype(jnp.float32).reshape(bsz, nc, chunk, h, n)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32).reshape(bsz, nc, chunk, h, n)
+
+    csum = jnp.cumsum(lac, axis=2)       # (B,nc,Q,H)
+    total = csum[:, :, -1]               # (B,nc,H)
+
+    # intra-chunk quadratic part (same for every chunk, no carry needed)
+    dmat = csum[:, :, :, None, :] - csum[:, :, None, :, :]   # (B,nc,t,u,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask in the LOG domain before exp: exp of the (positive) anti-causal
+    # entries can overflow, and where(c, inf, 0) poisons the backward pass.
+    dmat = jnp.where(causal[None, None, :, :, None], dmat, -1e30)
+    dexp = jnp.exp(dmat)
+    cb = jnp.einsum("bcthn,bcuhn->bctuh", cc, bc)
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", cb * dexp, xc)
+
+    # per-chunk state increment: Σ_u exp(total - cs_u) B_u ⊗ xdt_u
+    w_u = jnp.exp(total[:, :, None, :] - csum)               # (B,nc,Q,H)
+    incr = jnp.einsum("bcuh,bcuhn,bcuhp->bchnp", w_u, bc, xc)
+
+    # scan chunks: carry state, emit inter-chunk output
+    state0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, n, p), jnp.float32)
+    )
+
+    def step(st, inp):
+        cs_c, tot_c, c_c, incr_c = inp  # (B,Q,H) (B,H) (B,Q,H,N) (B,H,N,P)
+        y_inter = jnp.exp(cs_c)[..., None] * jnp.einsum("bthn,bhnp->bthp", c_c, st)
+        st_new = jnp.exp(tot_c)[..., None, None] * st + incr_c
+        return st_new, y_inter
+
+    st, y_inter = lax.scan(
+        step,
+        state0,
+        (
+            csum.swapaxes(0, 1),
+            total.swapaxes(0, 1),
+            cc.swapaxes(0, 1),
+            incr.swapaxes(0, 1),
+        ),
+    )
+    y = (y_intra + y_inter.swapaxes(0, 1)).reshape(bsz, sp, h, p)[:, :s]
+    y = y + x.astype(jnp.float32)[:, :s] * d_skip[None, None, :, None]
+    return y.astype(x.dtype), st
+
+
+# ------------------------------------------------------------- full block
+
+
+def mamba_block(
+    params: Params, xres: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Full-sequence mamba2 mixer. xres: (B, S, d) (already normed)."""
+    dm = dims(cfg)
+    zxbcdt = jnp.einsum(
+        "bsd,de->bse", xres, params["in_proj"].astype(cfg.compute_dtype)
+    )
+    z, xbc, dt = _split_proj(zxbcdt, dm)
+    xbc = jax.nn.silu(
+        _causal_conv(
+            xbc,
+            params["conv_w"].astype(cfg.compute_dtype),
+            params["conv_b"].astype(cfg.compute_dtype),
+        )
+    )
+    di, ns, ng = dm["d_inner"], dm["d_state"], dm["n_groups"]
+    xs = xbc[..., :di]
+    bs = xbc[..., di : di + ng * ns]
+    cs = xbc[..., di + ng * ns :]
+    bsz, s = xres.shape[0], xres.shape[1]
+    h, p = dm["n_heads"], dm["head_dim"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, _ = ssd_chunked(
+        xs.reshape(bsz, s, h, p),
+        dt,
+        params["A_log"],
+        bs.reshape(bsz, s, ng, ns),
+        cs.reshape(bsz, s, ng, ns),
+        params["D"],
+        cfg.ssm.chunk_size,
+    )
+    y = _gated_norm(y.reshape(bsz, s, di), z, params["norm_scale"], cfg.rms_norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.compute_dtype))
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    dm = dims(cfg)
+    return {
+        "ssm": jnp.zeros(
+            (batch, dm["n_heads"], dm["d_state"], dm["head_dim"]), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, dm["d_conv"] - 1, dm["conv_dim"]), dtype),
+    }
+
+
+def mamba_decode(
+    params: Params,
+    xres: jnp.ndarray,  # (B, 1, d)
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One recurrent decode step."""
+    dm = dims(cfg)
+    zxbcdt = jnp.einsum(
+        "bsd,de->bse", xres, params["in_proj"].astype(cfg.compute_dtype)
+    )
+    z, xbc_new, dt = _split_proj(zxbcdt, dm)
+
+    # conv over [cached K-1 inputs | new input]
+    hist = jnp.concatenate([cache["conv"], xbc_new.astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(cfg.compute_dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(
+        cfg.compute_dtype
+    )
+    xbc = jax.nn.silu(conv_out)[:, None, :]  # (B,1,C)
+    new_conv = hist[:, 1:]
+
+    di, ns, ng = dm["d_inner"], dm["d_state"], dm["n_groups"]
+    h, p = dm["n_heads"], dm["head_dim"]
+    bsz = xres.shape[0]
+    xs = xbc[..., :di].reshape(bsz, h, p).astype(jnp.float32)
+    bs = jnp.repeat(
+        xbc[..., di : di + ng * ns].reshape(bsz, ng, ns), h // ng, axis=1
+    ).astype(jnp.float32)
+    cs = jnp.repeat(
+        xbc[..., di + ng * ns :].reshape(bsz, ng, ns), h // ng, axis=1
+    ).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + params["dt_bias"])  # (B,H)
+
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt1 * a[None, :])[..., None, None]  # (B,H,1,1)
+    st = cache["ssm"] * decay + bs[..., None] * (dt1[..., None] * xs)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", cs, st) + xs * params["D"][None, :, None]
+
+    y = _gated_norm(
+        y.reshape(bsz, 1, di).astype(cfg.compute_dtype),
+        z,
+        params["norm_scale"],
+        cfg.rms_norm_eps,
+    )
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.compute_dtype))
+    return out, {"ssm": st, "conv": new_conv}

@@ -1,0 +1,427 @@
+"""Top-level model: embeddings + stack + head, for every assigned family.
+
+`build_model(cfg, mesh_ctx)` returns a `Model` of pure functions:
+
+    init(key)                      -> params
+    init_router_states()           -> router state stacks (MoE only)
+    forward(params, batch, states) -> (logits, new_states, aux, metrics)
+    loss_fn(params, batch, states) -> (loss, (new_states, metrics))
+    init_cache(batch, seq_len)     -> decode caches (+ cross-attn KV)
+    prefill(params, batch, cache, states)      -> (logits_last, cache, states)
+    decode_step(params, tokens, cache, states) -> (logits, cache, states)
+
+Batch dict keys by family:
+    all:    'tokens' (B, S) int32; training also 'labels' (B, S)
+    vlm:    'patches' (B, frontend_tokens, frontend_dim) — SigLIP stub output
+    encdec: 'frames' (B, enc_seq_len, frontend_dim)     — codec stub output
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common, mamba2, moe, stack
+from repro.models.stack import MeshCtx
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------- encoder
+
+
+def _init_encoder(key, cfg: ModelConfig) -> Params:
+    """Bidirectional transformer encoder (audio/encdec family)."""
+    enc_cfg = dataclasses.replace(
+        cfg, n_layers=cfg.n_enc_layers, attn_pattern=("global",)
+    )
+    keys = jax.random.split(key, cfg.n_enc_layers + 1)
+    layers = jax.vmap(lambda k: stack.init_layer(k, enc_cfg, "global", "dense"))(
+        keys[: cfg.n_enc_layers]
+    )
+    return {
+        "layers": layers,
+        "final_norm": common.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _apply_encoder(
+    params: Params, x: jnp.ndarray, cfg: ModelConfig, mesh_ctx=None
+) -> jnp.ndarray:
+    """Non-causal self-attention encoder over frame embeddings.
+
+    Uses the shared query-chunked attention (causal=False) so the (S, S)
+    score matrix is never materialized, and remats each scanned layer under
+    cfg.remat like the decoder stack."""
+    enc_cfg = dataclasses.replace(
+        cfg, n_layers=cfg.n_enc_layers, attn_pattern=("global",)
+    )
+
+    def body_fn(x, lp):
+        h = common.attention(
+            lp["attn"],
+            common.rmsnorm(lp["pre_norm"], x, cfg.rms_norm_eps),
+            enc_cfg,
+            positions=jnp.arange(x.shape[1])[None, :],
+            mesh_ctx=mesh_ctx,
+            causal=False,
+        )
+        x = x + h
+        h = common.mlp(
+            lp["mlp"], common.rmsnorm(lp["ffn_norm"], x, cfg.rms_norm_eps), enc_cfg
+        )
+        return x + h
+
+    if cfg.remat == "block":
+        body_fn = jax.checkpoint(body_fn)
+
+    def body(x, lp):
+        return body_fn(x, lp), None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    return common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
+
+
+# --------------------------------------------------------------- model
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mesh_ctx: MeshCtx
+
+    # ------------------------------------------------------------- init
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 6)
+        p: Params = {
+            "embed": common.init_embedding(keys[0], cfg),
+            "stack": stack.init_stack(keys[1], cfg),
+            "final_norm": common.init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        }
+        if cfg.n_enc_layers:
+            p["encoder"] = _init_encoder(keys[2], cfg)
+        if cfg.frontend_dim:
+            p["frontend_proj"] = (
+                jax.random.normal(
+                    keys[3], (cfg.frontend_dim, cfg.d_model), cfg.param_dtype
+                )
+                / math.sqrt(cfg.frontend_dim)
+            )
+        return p
+
+    def init_router_states(self) -> list:
+        return stack.init_stack_router_states(self.cfg)
+
+    # -------------------------------------------------------- embedding
+
+    def _embed_inputs(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        """Token embeddings with optional modality prefix. Returns (x, n_prefix)."""
+        cfg = self.cfg
+        x = common.embed(params["embed"], batch["tokens"], cfg)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(cfg.compute_dtype)
+            proj = jnp.einsum(
+                "bsf,fd->bsd", patches, params["frontend_proj"].astype(cfg.compute_dtype)
+            )
+            x = jnp.concatenate([proj, x], axis=1)
+            return x, cfg.frontend_tokens
+        return x, 0
+
+    def _encode(self, params: Params, batch) -> Optional[jnp.ndarray]:
+        cfg = self.cfg
+        if not cfg.n_enc_layers:
+            return None
+        frames = batch["frames"].astype(cfg.compute_dtype)
+        proj = jnp.einsum(
+            "bsf,fd->bsd", frames, params["frontend_proj"].astype(cfg.compute_dtype)
+        )
+        proj = self.mesh_ctx.constrain(proj, self.mesh_ctx.batch_spec, None, None)
+        return _apply_encoder(params["encoder"], proj, cfg, self.mesh_ctx)
+
+    # ---------------------------------------------------------- forward
+
+    def forward(
+        self,
+        params: Params,
+        batch: Dict[str, jnp.ndarray],
+        router_states: list,
+    ) -> Tuple[jnp.ndarray, list, jnp.ndarray, Dict]:
+        cfg = self.cfg
+        mc = self.mesh_ctx
+        x, n_prefix = self._embed_inputs(params, batch)
+        x = mc.constrain(x, mc.batch_spec, None, None)
+        enc_out = self._encode(params, batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, new_states, aux, mets = stack.apply_stack(
+            params["stack"],
+            x,
+            router_states,
+            cfg,
+            positions=positions,
+            enc_out=enc_out,
+            mesh_ctx=self.mesh_ctx,
+        )
+        x = common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        x = mc.constrain(x, mc.batch_spec, None, None)
+        logits = common.unembed(params["embed"], x, cfg)
+        # tokens stay batch-sharded; the vocab axis carries the model shards
+        logits = mc.constrain(logits, mc.batch_spec, None, mc.model_axis or None)
+        return logits, new_states, aux, mets
+
+    def loss_fn(
+        self, params: Params, batch: Dict[str, jnp.ndarray], router_states: list
+    ):
+        logits, new_states, aux, mets = self.forward(params, batch, router_states)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = jnp.where(labels >= 0, nll, 0.0)
+        ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        loss = ce + aux
+        mets = dict(mets)
+        mets.update(ce_loss=ce, aux_loss=aux, perplexity=jnp.exp(ce))
+        return loss, (new_states, mets)
+
+    # ---------------------------------------------------------- serving
+
+    def init_cache(
+        self, params: Params, batch: Dict[str, jnp.ndarray], seq_len: int
+    ) -> Params:
+        """Decode caches mirroring the stack layout; cross-attn K/V are
+        precomputed from the encoder output here (static per request)."""
+        cfg = self.cfg
+        period, n_groups, remainder = stack._group_layout(cfg)
+        kinds = cfg.layer_kinds()
+        bsz = batch["tokens"].shape[0]
+        kv_dtype = cfg.compute_dtype
+        enc_out = self._encode(params, batch)
+
+        def one_cache(mixer_kind, layer_params=None):
+            c: Dict[str, jnp.ndarray] = {}
+            base = mixer_kind.replace("+shared", "")
+            if base in ("global", "local"):
+                c.update(common.init_attention_cache(cfg, bsz, seq_len, base, kv_dtype))
+                if enc_out is not None and layer_params is not None:
+                    dt = cfg.compute_dtype
+                    c["ck"] = jnp.einsum(
+                        "bsd,dhk->bshk", enc_out, layer_params["cross"]["wk"].astype(dt)
+                    )
+                    c["cv"] = jnp.einsum(
+                        "bsd,dhk->bshk", enc_out, layer_params["cross"]["wv"].astype(dt)
+                    )
+            else:
+                c.update(mamba2.init_mamba_cache(cfg, bsz, kv_dtype))
+                if mixer_kind.endswith("+shared"):
+                    sc = common.init_attention_cache(cfg, bsz, seq_len, "global", kv_dtype)
+                    c.update({"sk": sc["k"], "sv": sc["v"], "spos": sc["pos"]})
+            return c
+
+        caches = []
+        for j in range(period):
+            reps = n_groups + (1 if j < remainder else 0)
+            lp0 = jax.tree.map(lambda a: a[0], params["stack"]["blocks"][j])
+            proto = one_cache(kinds[j][0], lp0)
+            if "ck" in proto:
+                # per-rep cross KV differ (different layer weights): build each
+                per = [
+                    one_cache(
+                        kinds[j][0],
+                        jax.tree.map(lambda a: a[r], params["stack"]["blocks"][j]),
+                    )
+                    for r in range(reps)
+                ]
+                caches.append(
+                    jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per)
+                )
+            else:
+                caches.append(
+                    jax.tree.map(
+                        lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), proto
+                    )
+                )
+        return {"blocks": caches}
+
+    def _apply_layer_decode(
+        self, p, x, cfg, mixer_kind, ffn_kind, cache, router_state
+    ):
+        base = mixer_kind.replace("+shared", "")
+        new_cache = dict(cache)
+        if base in ("global", "local"):
+            h, attn_cache = common.attention_decode(
+                p["attn"],
+                common.rmsnorm(p["pre_norm"], x, cfg.rms_norm_eps),
+                {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]},
+                cfg,
+                layer_kind=base,
+            )
+            new_cache.update(attn_cache)
+            x = x + stack._maybe_post(p, "post_attn_norm", h, cfg)
+            if "ck" in cache:
+                xq = common.rmsnorm(p["cross_norm"], x, cfg.rms_norm_eps)
+                dt = cfg.compute_dtype
+                q = jnp.einsum("bsd,dhk->bshk", xq, p["cross"]["wq"].astype(dt))
+                mask = jnp.ones((1, 1, 1, cache["ck"].shape[1]), bool)
+                y = common._attend(q, cache["ck"], cache["cv"], mask, 0.0, dt)
+                x = x + jnp.einsum(
+                    "bshk,hkd->bsd", y, p["cross"]["wo"].astype(dt)
+                )
+        else:
+            h, mcache = mamba2.mamba_decode(
+                p["mamba"],
+                common.rmsnorm(p["pre_norm"], x, cfg.rms_norm_eps),
+                {"ssm": cache["ssm"], "conv": cache["conv"]},
+                cfg,
+            )
+            new_cache.update(mcache)
+            x = x + h
+
+        aux = jnp.zeros((), jnp.float32)
+        if ffn_kind == "dense":
+            h = common.mlp(
+                p["mlp"], common.rmsnorm(p["ffn_norm"], x, cfg.rms_norm_eps), cfg
+            )
+            x = x + stack._maybe_post(p, "post_ffn_norm", h, cfg)
+        elif ffn_kind == "moe":
+            xin = common.rmsnorm(p["ffn_norm"], x, cfg.rms_norm_eps)
+            b, s, d = xin.shape
+            flat = xin.reshape(b * s, d)
+            y, router_state, aux, _ = moe.moe_ffn(
+                p["moe"], flat, router_state, cfg, self.mesh_ctx
+            )
+            h = y.reshape(b, s, d)
+            if cfg.dense_residual and "mlp" in p:
+                h = h + common.mlp(p["mlp"], xin, cfg)
+            if cfg.n_shared_experts and "shared_mlp" in p:
+                h = h + common.mlp(p["shared_mlp"], xin, cfg)
+            x = x + h
+
+        if mixer_kind.endswith("+shared"):
+            sp = self._shared_params
+            h, sc = common.attention_decode(
+                sp["attn"],
+                common.rmsnorm(sp["pre_norm"], x, cfg.rms_norm_eps),
+                {"k": cache["sk"], "v": cache["sv"], "pos": cache["spos"]},
+                cfg,
+                layer_kind="global",
+            )
+            new_cache.update({"sk": sc["k"], "sv": sc["v"], "spos": sc["pos"]})
+            x = x + h
+            h = common.mlp(
+                sp["mlp"], common.rmsnorm(sp["ffn_norm"], x, cfg.rms_norm_eps), cfg
+            )
+            x = x + h
+        return x, new_cache, router_state, aux
+
+    def decode_step(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,  # (B, 1) int32
+        cache: Params,
+        router_states: list,
+    ) -> Tuple[jnp.ndarray, Params, list]:
+        """One token for every sequence in the batch."""
+        cfg = self.cfg
+        period, n_groups, remainder = stack._group_layout(cfg)
+        kinds = cfg.layer_kinds()
+        self._shared_params = params["stack"].get("shared")
+        x = common.embed(params["embed"], tokens, cfg)
+
+        def scan_body(x, per_group):
+            lp, lc, ls = per_group
+            new_caches, new_states = [], []
+            for j in range(period):
+                x, nc, st, _ = self._apply_layer_decode(
+                    lp[j], x, cfg, kinds[j][0], kinds[j][1], lc[j], ls[j]
+                )
+                new_caches.append(nc)
+                new_states.append(st)
+            return x, (new_caches, new_states)
+
+        if n_groups > 0:
+            lp = [
+                jax.tree.map(lambda a: a[:n_groups], params["stack"]["blocks"][j])
+                for j in range(period)
+            ]
+            lc = [
+                jax.tree.map(lambda a: a[:n_groups], cache["blocks"][j])
+                for j in range(period)
+            ]
+            ls = [
+                None
+                if router_states[j] is None
+                else jax.tree.map(lambda a: a[:n_groups], router_states[j])
+                for j in range(period)
+            ]
+            x, (new_caches, new_states) = lax.scan(scan_body, x, (lp, lc, ls))
+        else:
+            new_caches = [None] * period
+            new_states = [None] * period
+
+        # remainder layers
+        rem_caches, rem_states = [], []
+        for j in range(remainder):
+            lp_j = jax.tree.map(lambda a: a[n_groups], params["stack"]["blocks"][j])
+            lc_j = jax.tree.map(lambda a: a[n_groups], cache["blocks"][j])
+            ls_j = (
+                None
+                if router_states[j] is None
+                else jax.tree.map(lambda a: a[n_groups], router_states[j])
+            )
+            x, nc, st, _ = self._apply_layer_decode(
+                lp_j, x, cfg, kinds[j][0], kinds[j][1], lc_j, ls_j
+            )
+            rem_caches.append(nc)
+            rem_states.append(st)
+
+        out_caches, out_states = [], []
+        for j in range(period):
+            c = new_caches[j]
+            s = new_states[j]
+            if remainder and j < remainder:
+                c = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                    c,
+                    rem_caches[j],
+                )
+                if s is not None:
+                    s = jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b[None]], axis=0),
+                        s,
+                        rem_states[j],
+                    )
+            out_caches.append(c)
+            out_states.append(s)
+
+        x = common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
+        logits = common.unembed(params["embed"], x, cfg)
+        return logits, {"blocks": out_caches}, out_states
+
+    def prefill(
+        self,
+        params: Params,
+        batch: Dict[str, jnp.ndarray],
+        router_states: list,
+        seq_len: int,
+    ):
+        """Prefill = forward pass + cache fill. For simplicity the cache is
+        filled by scanning decode steps for short prompts; production prefill
+        uses the chunked forward and writes K/V in bulk — here we only need
+        the compiled-graph shape for the dry-run, so prefill == forward and
+        returns last-position logits."""
+        logits, new_states, aux, mets = self.forward(params, batch, router_states)
+        return logits[:, -1:], new_states, mets
+
+
+def build_model(cfg: ModelConfig, mesh_ctx: MeshCtx = MeshCtx()) -> Model:
+    cfg.validate()
+    return Model(cfg=cfg, mesh_ctx=mesh_ctx)

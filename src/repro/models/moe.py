@@ -1,0 +1,579 @@
+"""Mixture-of-Experts FFN with BIP-balanced routing and expert parallelism.
+
+Two execution paths, same math:
+
+* `moe_ffn_local` — plain jnp scatter/gather on one logical array. Used on
+  single-device (tests, the paper-reproduction training runs) and as the
+  semantic reference for the distributed path.
+
+* `moe_ffn_ep` — shard_map over the production mesh. Activations arrive
+  sharded over the data axes and replicated over 'model'; experts are sharded
+  over 'model' (expert parallelism). Each model-rank routes its replicated
+  token block, gathers the tokens bound for ITS experts into a static
+  (m_local, C, d) buffer, runs the expert GEMMs, and contributes its experts'
+  outputs to a psum over 'model'. There is no explicit all-to-all: dispatch
+  is a local gather (tokens are already present via model-axis replication)
+  and combine rides the same all-reduce tensor parallelism already pays for
+  the FFN block. See DESIGN.md §6.
+
+Capacity: C = ceil(k·n/m · capacity_factor). Because BIP routing bounds
+per-expert load at ~(1 + MaxVio)·k·n/m with MaxVio ≲ 0.2 from the first step,
+capacity_factor 1.25 loses almost nothing — the paper's systems payoff.
+Tokens beyond capacity are dropped (contribute zero), standard MoE practice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import metrics as core_metrics
+from repro.core import route
+from repro.core.types import RouterConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def router_config(cfg: ModelConfig, data_axes: Tuple[str, ...] = ()) -> RouterConfig:
+    r = cfg.routing
+    return RouterConfig(
+        n_experts=r.n_experts,
+        top_k=r.top_k,
+        strategy=r.strategy,
+        bip_iters=r.bip_iters,
+        aux_loss_alpha=r.aux_loss_alpha,
+        lossfree_lr=r.lossfree_lr,
+        norm_topk_prob=r.norm_topk_prob,
+        score_fn=r.score_fn,
+        use_kernel=r.use_kernel,
+        sync=r.sync,
+        data_axes=data_axes,
+    )
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    r = cfg.routing
+    return max(
+        int(math.ceil(r.top_k * n_tokens / r.n_experts * r.capacity_factor)), 1
+    )
+
+
+# ------------------------------------------------------------------- init
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    m = cfg.routing.n_experts
+    keys = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "w_router": jax.random.normal(keys[0], (d, m), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(keys[1], (m, d, f), cfg.param_dtype) * s_in,
+        "w_up": jax.random.normal(keys[2], (m, d, f), cfg.param_dtype) * s_in,
+        "w_down": jax.random.normal(keys[3], (m, f, d), cfg.param_dtype)
+        * (s_out / math.sqrt(2 * cfg.n_layers)),
+    }
+    return p
+
+
+def _flat_axis_index(mesh, axes: Tuple[str, ...]):
+    """Row-major flat index across several mesh axes (inside shard_map)."""
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + lax.axis_index(a)
+    return idx
+
+
+# Above this many tokens per invocation, gathering activations (ep2d) costs
+# more than gathering weight shards (ep); below it, ep2d wins outright —
+# for decode it removes the per-layer weight gather entirely. Measured via
+# the dry-run roofline (EXPERIMENTS.md §Perf).
+EP2D_TOKEN_THRESHOLD = 32768
+
+
+def moe_ffn(params, x, router_state, cfg, mesh_ctx):
+    """Dispatch to the configured implementation ('auto' picks by size)."""
+    if mesh_ctx is not None and getattr(mesh_ctx, "use_ep", False):
+        impl_name = cfg.routing.moe_impl
+        if impl_name == "auto":
+            # selective gather wins at every scale measured (§Perf); tiny
+            # token counts route through its ep2d fallback automatically
+            impl_name = "ep2ds"
+        impl = {"ep2d": moe_ffn_ep2d, "ep2ds": moe_ffn_ep2ds, "ep": moe_ffn_ep}[
+            impl_name
+        ]
+        return impl(
+            params,
+            x,
+            router_state,
+            cfg,
+            mesh_ctx.mesh,
+            data_axes=mesh_ctx.data_axes,
+            model_axis=mesh_ctx.model_axis,
+        )
+    return moe_ffn_local(params, x, router_state, cfg)
+
+
+# -------------------------------------------------- dispatch bookkeeping
+
+
+def _dispatch_plan(
+    expert_index: jnp.ndarray,  # (n, k) int32
+    n_experts: int,
+    capacity: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Position of every (token, slot) inside its expert's capacity queue.
+
+    Returns (pos (n, k) int32, keep (n, k) bool). Queue order is token order
+    (earlier tokens win capacity), slot-major within a token.
+    """
+    n, k = expert_index.shape
+    flat = expert_index.reshape(-1)  # (n*k,) — token-major, slot-minor
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (n*k, m)
+    pos_flat = jnp.cumsum(onehot, axis=0) - 1  # position within expert queue
+    pos = jnp.take_along_axis(pos_flat, flat[:, None], axis=1)[:, 0]
+    pos = pos.reshape(n, k)
+    keep = pos < capacity
+    return pos, keep
+
+
+def _expert_ffn(
+    w_gate: jnp.ndarray,  # (e, d, f)
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,  # (e, f, d)
+    xb: jnp.ndarray,  # (e, c, d)
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    dt = cfg.compute_dtype
+    g = jnp.einsum("ecd,edf->ecf", xb, w_gate.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xb, w_up.astype(dt))
+    return jnp.einsum("ecf,efd->ecd", act(g) * u, w_down.astype(dt))
+
+
+# -------------------------------------------------------- single-device
+
+
+def moe_ffn_local(
+    params: Params,
+    x: jnp.ndarray,  # (n, d) flattened tokens
+    router_state: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Reference path. Returns (y, new_router_state, aux_loss, metrics)."""
+    n, d = x.shape
+    m = cfg.routing.n_experts
+    cap = expert_capacity(n, cfg)
+    rcfg = router_config(cfg)
+
+    logits = jnp.einsum("nd,dm->nm", x.astype(jnp.float32), params["w_router"])
+    out = route(logits, router_state, rcfg)
+    pos, keep = _dispatch_plan(out.expert_index, m, cap)
+
+    # scatter tokens into (m, cap, d)
+    e_flat = out.expert_index.reshape(-1)
+    pos_flat = pos.reshape(-1)
+    keep_flat = keep.reshape(-1)
+    src = jnp.repeat(x, cfg.routing.top_k, axis=0) * keep_flat[:, None]
+    buf = jnp.zeros((m, cap, d), x.dtype)
+    buf = buf.at[e_flat, jnp.where(keep_flat, pos_flat, 0)].add(
+        jnp.where(keep_flat[:, None], src, 0.0)
+    )
+
+    y = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], buf, cfg)
+
+    # combine: gather back and weight
+    gathered = y[e_flat, jnp.where(keep_flat, pos_flat, 0)]  # (n*k, d)
+    w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
+    contrib = jnp.where(keep_flat[:, None], gathered * w_flat, 0.0)
+    y_tok = contrib.reshape(n, cfg.routing.top_k, d).sum(axis=1)
+    return y_tok, out.state, out.aux_loss, out.metrics
+
+
+# ------------------------------------------------------ expert parallel
+
+
+def moe_ffn_ep2d(
+    params: Params,
+    x: jnp.ndarray,  # (n_global, d), sharded over data axes
+    router_state: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    mesh,
+    *,
+    data_axes: Tuple[str, ...],
+    model_axis: str,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """2D expert-parallel path: gather ACTIVATIONS, never gather weights.
+
+    Expert weights stay fully sharded at rest AND at use: experts over
+    'model', each expert's hidden f over the data axes. Tokens are
+    all-gathered over data inside the block (every rank sees the full
+    microbatch), each rank computes its (m_loc, f_loc) slice for all tokens,
+    and the combine is one reduce-scatter over data + psum over model.
+
+    vs the FSDP path (moe_ffn_ep + data-sharded weights): communication per
+    layer drops from O(expert_weight_bytes) to O(token_bytes) — for
+    arctic-480b decode that is 1.67 GB -> ~2 MB per layer (§Perf). Expert
+    gradients become fully local (each rank owns its weight shard and holds
+    all tokens), removing the gradient reduce-scatter for expert params.
+    """
+    m = cfg.routing.n_experts
+    k = cfg.routing.top_k
+    n_global, d = x.shape
+    n_data_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    token_sharded = (
+        n_data_shards > 1
+        and n_global % n_data_shards == 0
+        and n_global >= n_data_shards
+    )
+    ep = mesh.shape[model_axis]
+    assert m % ep == 0, (m, ep)
+    m_loc = m // ep
+    f = cfg.moe_d_ff or cfg.d_ff
+    f_shards = n_data_shards if (token_sharded and f % n_data_shards == 0) else 1
+    cap = expert_capacity(n_global, cfg)
+    rcfg = router_config(cfg)
+
+    x_spec = P(data_axes if token_sharded else None, None)
+    wf_spec = P(model_axis, None, data_axes if f_shards > 1 else None)
+    wd_spec = P(model_axis, data_axes if f_shards > 1 else None, None)
+
+    def block(x_loc, w_router, w_gate, w_up, w_down, q_state):
+        rank = lax.axis_index(model_axis)
+        if token_sharded:
+            x_all = lax.all_gather(x_loc, data_axes, axis=0, tiled=True)
+        else:
+            x_all = x_loc  # already replicated
+        logits = jnp.einsum("nd,dm->nm", x_all.astype(jnp.float32), w_router)
+        out = route(logits, q_state, rcfg)
+        pos, keep = _dispatch_plan(out.expert_index, m, cap)
+
+        e_glob = out.expert_index
+        mine = (e_glob >= rank * m_loc) & (e_glob < (rank + 1) * m_loc) & keep
+        e_loc = jnp.clip(e_glob - rank * m_loc, 0, m_loc - 1)
+        e_flat = e_loc.reshape(-1)
+        pos_flat = pos.reshape(-1)
+        mine_flat = mine.reshape(-1)
+        src = jnp.repeat(x_all, k, axis=0)
+        buf = jnp.zeros((m_loc, cap, d), x_all.dtype)
+        buf = buf.at[
+            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
+        ].add(jnp.where(mine_flat[:, None], src, 0.0))
+
+        # expert FFN on the local (m_loc, f_loc) weight shard; y is partial
+        # over f, completed by the psum below
+        y = _expert_ffn(w_gate, w_up, w_down, buf, cfg)
+
+        gathered = y[
+            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
+        ]
+        w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
+        contrib = jnp.where(mine_flat[:, None], gathered * w_flat, 0.0)
+        y_tok = contrib.reshape(n_global, k, d).sum(axis=1)
+        y_tok = lax.psum(y_tok, model_axis)
+        if token_sharded:
+            if f_shards > 1:
+                y_tok = lax.psum_scatter(
+                    y_tok, data_axes, scatter_dimension=0, tiled=True
+                )
+            else:
+                idx = _flat_axis_index(mesh, data_axes)
+                n_loc = n_global // n_data_shards
+                y_tok = lax.dynamic_slice_in_dim(y_tok, idx * n_loc, n_loc, 0)
+
+        # routing ran on the gathered tokens: identical on every data rank,
+        # but all_gather outputs are typed varying-over-data — the pmeans
+        # are semantic no-ops that re-establish replication for check_vma
+        new_q = out.state["q"]
+        load = out.metrics["load"]
+        dropped = out.metrics["dropped_frac_cap1"]
+        aux = out.aux_loss
+        if token_sharded:
+            new_q = lax.pmean(new_q, data_axes)
+            load = lax.pmean(load, data_axes)
+            dropped = lax.pmean(dropped, data_axes)
+            aux = lax.pmean(aux, data_axes)
+        mean_load = (n_global * k) / m
+        mets = {
+            "load": load,
+            "max_vio": jnp.max(load) / mean_load - 1.0,
+            "dropped_frac_cap1": dropped,
+        }
+        return y_tok, {"q": new_q}, aux, mets
+
+    fn = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(
+            x_spec,
+            P(None, None),
+            wf_spec,
+            wf_spec,
+            wd_spec,
+            {"q": P(None)},
+        ),
+        out_specs=(
+            x_spec,
+            {"q": P(None)},
+            P(),
+            {"load": P(), "max_vio": P(), "dropped_frac_cap1": P()},
+        ),
+        check_vma=True,
+    )
+    return fn(
+        x,
+        params["w_router"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        router_state,
+    )
+
+
+def moe_ffn_ep2ds(
+    params: Params,
+    x: jnp.ndarray,  # (n_global, d), sharded over data axes
+    router_state: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    mesh,
+    *,
+    data_axes: Tuple[str, ...],
+    model_axis: str,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Selective 2D expert parallelism — gather only DISPATCHED tokens.
+
+    Weights stay fully sharded like ep2d (experts→model, f→data), but
+    instead of all-gathering the raw activations, each data rank dispatches
+    its local tokens into per-expert capacity buffers FIRST and the
+    (m_loc, cap_local, d) buffers are what crosses the wire:
+
+        gather bytes / layer = k·n·cf/m · m_loc · d  (≈ x_bytes · k·cf/ep)
+
+    — ~8x less than ep2d's full-token gather at arctic's k=2, ep=16, and it
+    replaces moe_ffn_ep's per-layer expert-weight gather entirely. Combine
+    is one psum_scatter over data (sums f-partials AND returns each source
+    rank its own slice) plus the model-axis psum shared with TP.
+    See EXPERIMENTS.md §Perf for the measured before/after.
+    """
+    m = cfg.routing.n_experts
+    k = cfg.routing.top_k
+    n_global, d = x.shape
+    n_data_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    token_sharded = (
+        n_data_shards > 1
+        and n_global % n_data_shards == 0
+        and n_global >= n_data_shards
+    )
+    if not token_sharded:
+        return moe_ffn_ep2d(
+            params, x, router_state, cfg, mesh,
+            data_axes=data_axes, model_axis=model_axis,
+        )
+    ep = mesh.shape[model_axis]
+    assert m % ep == 0, (m, ep)
+    m_loc = m // ep
+    n_loc = n_global // n_data_shards
+    cap = expert_capacity(n_loc, cfg)
+    f = cfg.moe_d_ff or cfg.d_ff
+    f_sharded = f % n_data_shards == 0
+    rcfg = router_config(cfg)
+
+    wf_spec = P(model_axis, None, data_axes if f_sharded else None)
+    wd_spec = P(model_axis, data_axes if f_sharded else None, None)
+
+    def block(x_loc, w_router, w_gate, w_up, w_down, q_state):
+        rank = lax.axis_index(model_axis)
+        logits = jnp.einsum("nd,dm->nm", x_loc.astype(jnp.float32), w_router)
+        out = route(logits, q_state, rcfg)
+        pos, keep = _dispatch_plan(out.expert_index, m, cap)
+
+        e_glob = out.expert_index
+        mine = (e_glob >= rank * m_loc) & (e_glob < (rank + 1) * m_loc) & keep
+        e_loc = jnp.clip(e_glob - rank * m_loc, 0, m_loc - 1)
+        e_flat = e_loc.reshape(-1)
+        pos_flat = pos.reshape(-1)
+        mine_flat = mine.reshape(-1)
+        src = jnp.repeat(x_loc, k, axis=0)
+        buf = jnp.zeros((m_loc, cap, d), x_loc.dtype)
+        buf = buf.at[
+            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
+        ].add(jnp.where(mine_flat[:, None], src, 0.0))
+
+        # selective gather: only dispatched tokens cross the data axis
+        buf_all = lax.all_gather(buf, data_axes, axis=1, tiled=True)
+        # (m_loc, n_data * cap, d)
+
+        y = _expert_ffn(w_gate, w_up, w_down, buf_all, cfg)
+
+        if f_sharded:
+            # y is partial over f: sum partials and hand every source rank
+            # its own slice back in one collective
+            y = lax.psum_scatter(y, data_axes, scatter_dimension=1, tiled=True)
+        else:
+            # weights were replicated over data: y is complete; just take
+            # this rank's slice of the gathered axis
+            idx = _flat_axis_index(mesh, data_axes)
+            y = lax.dynamic_slice_in_dim(y, idx * cap, cap, axis=1)
+        # (m_loc, cap, d), complete values for THIS rank's dispatched tokens
+
+        gathered = y[
+            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
+        ]
+        w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
+        contrib = jnp.where(mine_flat[:, None], gathered * w_flat, 0.0)
+        y_tok = contrib.reshape(n_loc, k, d).sum(axis=1)
+        y_tok = lax.psum(y_tok, model_axis)
+
+        new_q = lax.pmean(out.state["q"], data_axes)
+        load = lax.psum(out.metrics["load"], data_axes)
+        mean_load = (n_global * k) / m
+        mets = {
+            "load": load,
+            "max_vio": jnp.max(load) / mean_load - 1.0,
+            "dropped_frac_cap1": lax.pmean(
+                out.metrics["dropped_frac_cap1"], data_axes
+            ),
+        }
+        aux = lax.pmean(out.aux_loss, data_axes)
+        return y_tok, {"q": new_q}, aux, mets
+
+    fn = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(
+            P(data_axes, None),
+            P(None, None),
+            wf_spec,
+            wf_spec,
+            wd_spec,
+            {"q": P(None)},
+        ),
+        out_specs=(
+            P(data_axes, None),
+            {"q": P(None)},
+            P(),
+            {"load": P(), "max_vio": P(), "dropped_frac_cap1": P()},
+        ),
+        check_vma=True,
+    )
+    return fn(
+        x,
+        params["w_router"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        router_state,
+    )
+
+
+def moe_ffn_ep(
+    params: Params,
+    x: jnp.ndarray,  # (n_global, d), sharded over data axes
+    router_state: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    mesh,
+    *,
+    data_axes: Tuple[str, ...],
+    model_axis: str,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Expert-parallel path under shard_map (see module docstring)."""
+    m = cfg.routing.n_experts
+    k = cfg.routing.top_k
+    n_global, d = x.shape
+    n_data_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    if n_global % n_data_shards != 0 or n_global < n_data_shards:
+        # tiny token counts (single-request decode): replicate tokens over
+        # the data axes instead of sharding them.
+        data_axes = ()
+        n_data_shards = 1
+    ep = mesh.shape[model_axis]
+    assert m % ep == 0, (m, ep)
+    m_loc = m // ep
+    n_loc = n_global // n_data_shards
+    cap = expert_capacity(n_loc, cfg)
+    rcfg = router_config(cfg, data_axes=data_axes if cfg.routing.sync == "global" else ())
+
+    def block(x_loc, w_router, w_gate, w_up, w_down, q_state):
+        # x_loc: (n_loc, d); w_gate: (m_loc, d, f); q_state: {'q': (m,)}
+        rank = lax.axis_index(model_axis)
+        logits = jnp.einsum("nd,dm->nm", x_loc.astype(jnp.float32), w_router)
+        out = route(logits, q_state, rcfg)
+        pos, keep = _dispatch_plan(out.expert_index, m, cap)
+
+        # keep only slots routed to THIS rank's experts
+        e_glob = out.expert_index  # (n_loc, k)
+        mine = (e_glob >= rank * m_loc) & (e_glob < (rank + 1) * m_loc) & keep
+        e_loc = jnp.clip(e_glob - rank * m_loc, 0, m_loc - 1)
+
+        e_flat = e_loc.reshape(-1)
+        pos_flat = pos.reshape(-1)
+        mine_flat = mine.reshape(-1)
+        src = jnp.repeat(x_loc, k, axis=0)
+        buf = jnp.zeros((m_loc, cap, d), x_loc.dtype)
+        buf = buf.at[
+            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
+        ].add(jnp.where(mine_flat[:, None], src, 0.0))
+
+        y = _expert_ffn(w_gate, w_up, w_down, buf, cfg)
+
+        gathered = y[
+            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
+        ]
+        w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
+        contrib = jnp.where(mine_flat[:, None], gathered * w_flat, 0.0)
+        y_tok = contrib.reshape(n_loc, k, d).sum(axis=1)
+        # combine across expert-owners (rides the TP all-reduce)
+        y_tok = lax.psum(y_tok, model_axis)
+
+        # keep router state replicated: average duals over data shards
+        new_q = lax.pmean(out.state["q"], data_axes) if data_axes else out.state["q"]
+        # global balance metrics: sum local loads over data shards
+        load = out.metrics["load"]
+        dropped = out.metrics["dropped_frac_cap1"]
+        aux = out.aux_loss
+        if data_axes:
+            load = lax.psum(load, data_axes)
+            dropped = lax.pmean(dropped, data_axes)
+            aux = lax.pmean(aux, data_axes)
+        mean_load = (n_global * k) / m
+        mets = {
+            "load": load,
+            "max_vio": jnp.max(load) / mean_load - 1.0,
+            "dropped_frac_cap1": dropped,
+        }
+        return y_tok, {"q": new_q}, aux, mets
+
+    f = jax.shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(
+            P(data_axes if data_axes else None, None),  # x
+            P(None, None),  # w_router (replicated)
+            P(model_axis, None, None),  # w_gate
+            P(model_axis, None, None),  # w_up
+            P(model_axis, None, None),  # w_down
+            {"q": P(None)},  # router state replicated
+        ),
+        out_specs=(
+            P(data_axes if data_axes else None, None),
+            {"q": P(None)},
+            P(),
+            {"load": P(), "max_vio": P(), "dropped_frac_cap1": P()},
+        ),
+        check_vma=True,
+    )
+    return f(
+        x,
+        params["w_router"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        router_state,
+    )

@@ -1,0 +1,13 @@
+"""repro.optim — AdamW + schedules, pure JAX (no optax dependency)."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import constant, cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "constant",
+    "cosine_schedule",
+    "global_norm",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,95 @@
+"""AdamW with per-config dtype policy and global-norm clipping.
+
+Optimizer state dtypes are configurable per model (ModelConfig.adam_mu_dtype /
+adam_nu_dtype): arctic-480b uses bf16 mu to fit 16 GB/chip on one pod
+(DESIGN.md §6). State is a pytree mirroring params:
+    {'step': (), 'mu': tree, 'nu': tree}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    mu_dtype: Any = jnp.float32
+    nu_dtype: Any = jnp.float32
+
+
+def _dtype(name: str):
+    return jnp.bfloat16 if name == "bf16" else jnp.float32
+
+
+def from_model_config(cfg, **overrides) -> AdamWConfig:
+    return AdamWConfig(
+        mu_dtype=_dtype(cfg.adam_mu_dtype),
+        nu_dtype=_dtype(cfg.adam_nu_dtype),
+        **overrides,
+    )
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=cfg.mu_dtype), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=cfg.nu_dtype), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    grads,
+    opt_state: Dict[str, Any],
+    params,
+    lr: jnp.ndarray,
+    cfg: AdamWConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """Returns (new_params, new_opt_state, info)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd_math(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = mu_n / c1
+        vhat = nu_n / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay > 0:  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * delta
+        return p_n.astype(p.dtype), mu_n.astype(mu.dtype), nu_n.astype(nu.dtype)
+
+    # elementwise chains fuse in XLA, so whole-leaf updates do NOT
+    # materialize f32 intermediates; keeping them whole also preserves
+    # donation aliasing of params/mu/nu (measured: slicing the update into a
+    # lax.map COSTS ~11 GB on arctic-480b by breaking aliasing)
+    out = jax.tree.map(upd_math, grads, opt_state["mu"], opt_state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return (
+        new_params,
+        {"step": step, "mu": new_mu, "nu": new_nu},
+        {"grad_norm": gnorm, "lr": lr},
+    )

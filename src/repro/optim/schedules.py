@@ -1,0 +1,29 @@
+"""Learning-rate schedules as step -> lr callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak * (final_frac + (1.0 - final_frac) * cos)
+
+    return f
+
+
+def linear_warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    cos = cosine_schedule(peak, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return f

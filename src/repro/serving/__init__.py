@@ -1,0 +1,4 @@
+"""repro.serving — batched KV-cache serving."""
+from repro.serving.engine import ServeEngine, greedy_generate
+
+__all__ = ["ServeEngine", "greedy_generate"]

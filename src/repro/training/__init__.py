@@ -1,0 +1,4 @@
+"""repro.training — TrainState and the training loop."""
+from repro.training.loop import TrainState, make_train_step, train_loop
+
+__all__ = ["TrainState", "make_train_step", "train_loop"]

@@ -1,0 +1,151 @@
+"""Training loop: TrainState, jit'd train_step factory, host-side driver.
+
+The train step threads three pytrees: params, optimizer state, and the
+per-MoE-layer router states (the BIP dual vector q / Loss-Free bias). The
+host loop accumulates the paper's balance measurements (per-batch MaxVio per
+layer -> AvgMaxVio / SupMaxVio) via BalanceTracker — exactly the quantities
+in the paper's Tables 2-5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import BalanceTracker
+from repro.models.model import Model
+from repro.optim import adamw as _adamw
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    router_states: Any
+
+
+def init_train_state(model: Model, key, opt_cfg: _adamw.AdamWConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt_state=_adamw.adamw_init(params, opt_cfg),
+        router_states=model.init_router_states(),
+    )
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: _adamw.AdamWConfig,
+    lr_fn: Callable[[jnp.ndarray], jnp.ndarray],
+):
+    """Returns train_step(state, batch) -> (state, metrics). Pure; jit-ready."""
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        (loss, (new_router, mets)), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True
+        )(state.params, batch, state.router_states)
+        lr = lr_fn(state.opt_state["step"].astype(jnp.float32))
+        new_params, new_opt, info = _adamw.adamw_update(
+            grads, state.opt_state, state.params, lr, opt_cfg
+        )
+        mets = dict(mets)
+        mets.update(loss=loss, **info)
+        return (
+            TrainState(params=new_params, opt_state=new_opt, router_states=new_router),
+            mets,
+        )
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainLog:
+    """Host-side record of one run, including the paper's balance metrics."""
+
+    losses: List[float] = dataclasses.field(default_factory=list)
+    perplexities: List[float] = dataclasses.field(default_factory=list)
+    step_times: List[float] = dataclasses.field(default_factory=list)
+    max_vio_steps: List[np.ndarray] = dataclasses.field(default_factory=list)
+    per_layer: List[BalanceTracker] = dataclasses.field(default_factory=list)
+    model_tracker: BalanceTracker = dataclasses.field(default_factory=BalanceTracker)
+
+    def record(self, mets: Dict[str, Any], dt: float) -> None:
+        self.losses.append(float(mets["ce_loss"]))
+        self.perplexities.append(float(mets["perplexity"]))
+        self.step_times.append(dt)
+        vios = np.asarray(mets.get("max_vio_per_layer", np.zeros(0)))
+        if vios.size:
+            self.max_vio_steps.append(vios)
+            if not self.per_layer:
+                self.per_layer = [BalanceTracker() for _ in range(vios.size)]
+            for t, v in zip(self.per_layer, vios):
+                t.add(float(v))
+            # model-level MaxVio for the batch = max over layers (conservative)
+            self.model_tracker.add(float(vios.max()))
+
+    def summary(self) -> Dict[str, Any]:
+        out = {
+            "final_loss": self.losses[-1] if self.losses else None,
+            "final_ppl": self.perplexities[-1] if self.perplexities else None,
+            "mean_step_time": float(np.mean(self.step_times[2:]))
+            if len(self.step_times) > 2
+            else None,
+            **self.model_tracker.summary(),
+        }
+        if self.per_layer:
+            out["AvgMaxVio_per_layer"] = [t.avg_max_vio for t in self.per_layer]
+        return out
+
+
+def train_loop(
+    model: Model,
+    batches: Iterable[Dict[str, jnp.ndarray]],
+    *,
+    key=None,
+    lr: float = 3e-4,
+    warmup_steps: int = 20,
+    total_steps: int = 200,
+    opt_overrides: Optional[Dict] = None,
+    log_every: int = 0,
+    state: Optional[TrainState] = None,
+) -> Tuple[TrainState, TrainLog]:
+    from repro.optim.schedules import linear_warmup_cosine
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    opt_cfg = _adamw.from_model_config(model.cfg, **(opt_overrides or {}))
+    if state is None:
+        state = init_train_state(model, key, opt_cfg)
+    step_fn = jax.jit(
+        make_train_step(model, opt_cfg, linear_warmup_cosine(lr, warmup_steps, total_steps))
+    )
+    log = TrainLog()
+    for i, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        state, mets = step_fn(state, batch)
+        jax.block_until_ready(mets["loss"])
+        log.record(mets, time.perf_counter() - t0)
+        if log_every and i % log_every == 0:
+            print(
+                f"step {i:5d} loss {log.losses[-1]:.4f} ppl {log.perplexities[-1]:.2f}"
+                + (
+                    f" maxvio {log.max_vio_steps[-1].max():.3f}"
+                    if log.max_vio_steps
+                    else ""
+                )
+            )
+    return state, log
+
+
+def evaluate_ppl(model: Model, state: TrainState, batches) -> float:
+    """Test perplexity, routing states frozen (read-only copy per batch)."""
+    ces, ns = [], []
+    loss_fn = jax.jit(model.loss_fn)
+    for batch in batches:
+        _, (_, mets) = loss_fn(state.params, batch, state.router_states)
+        ces.append(float(mets["ce_loss"]))
+    return float(np.exp(np.mean(ces)))
