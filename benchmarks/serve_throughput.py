@@ -1,0 +1,180 @@
+"""Serving throughput under a synthetic Poisson request stream.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput \
+        --arch minimind_moe_16e --reduced --requests 32 --rate 50
+
+Two measurements (DESIGN.md §Serving):
+
+1. Prefill throughput: the same prompt batch prefilled (a) the seed way —
+   one token per jit'd decode_step call in a host loop — and (b) through the
+   engine's chunked prefill. Reports tokens/s for both and the speedup
+   (acceptance: >= 5x on the reduced minimind-moe-16e).
+
+2. Continuous batching under load: requests with Poisson arrivals and mixed
+   prompt/output lengths stream through the slot pool; reports end-to-end
+   tokens/s, step count, and the per-expert load histogram accumulated over
+   every serve step — the BIP router should keep MaxVio small even though
+   prefill chunks and single decode tokens share each router invocation.
+
+Prints ``name,us_per_call,derived`` CSV lines per the repo contract.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _per_token_prefill_tps(model, params, prompts, max_seq_len) -> float:
+    """Seed ServeEngine.prefill semantics: one decode_step per position."""
+    import jax
+    import jax.numpy as jnp
+
+    decode = jax.jit(model.decode_step)
+    states = model.init_router_states()
+    cache = model.init_cache(params, {"tokens": prompts}, max_seq_len)
+    logits, cache2, states2 = decode(params, prompts[:, :1], cache, states)
+    jax.block_until_ready(logits)  # compile outside the timed region
+
+    cache = model.init_cache(params, {"tokens": prompts}, max_seq_len)
+    st = model.init_router_states()
+    t0 = time.perf_counter()
+    for t in range(prompts.shape[1]):
+        logits, cache, st = decode(params, prompts[:, t : t + 1], cache, st)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return prompts.size / dt
+
+
+def _chunked_prefill_tps(model, params, prompts, max_seq_len, chunk) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    b, s = prompts.shape
+    pad = (-s) % chunk
+    padded = jnp.pad(prompts, ((0, 0), (0, pad)))
+    step = jax.jit(model.prefill_chunk)
+    lengths_full = jnp.full((b,), chunk, jnp.int32)
+    lengths_tail = jnp.full((b,), s - (s // chunk) * chunk or chunk, jnp.int32)
+
+    def run():
+        cache = model.init_slot_cache(params, b, max_seq_len)
+        st = model.init_router_states()
+        logits = None
+        for t in range(0, s, chunk):
+            lengths = lengths_full if t + chunk <= s else lengths_tail
+            logits, cache, st, _ = step(
+                params, padded[:, t : t + chunk], cache, st, lengths
+            )
+        jax.block_until_ready(logits)
+
+    run()  # compile
+    t0 = time.perf_counter()
+    run()
+    dt = time.perf_counter() - t0
+    return prompts.size / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minimind_moe_16e")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--max-seq-len", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--prefill-batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=100.0, help="Poisson req/s")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingEngine
+
+    import jax
+
+    cfg = (
+        configs.reduced_for_smoke(args.arch, vocab_size=512)
+        if args.reduced
+        else configs.get(args.arch)
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    # ---- 1. prefill: seed per-token loop vs chunked --------------------
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.prefill_batch, args.prompt_len)),
+        jnp.int32,
+    )
+    tps_seed = _per_token_prefill_tps(model, params, prompts, args.max_seq_len)
+    tps_chunk = _chunked_prefill_tps(
+        model, params, prompts, args.max_seq_len, args.chunk
+    )
+    speedup = tps_chunk / tps_seed
+    print(f"prefill_per_token,{1e6 / tps_seed:.2f},{tps_seed:.0f} tok/s")
+    print(f"prefill_chunked,{1e6 / tps_chunk:.2f},{tps_chunk:.0f} tok/s")
+    print(f"prefill_speedup,,{speedup:.2f}x")
+
+    # ---- 2. Poisson stream through the engine --------------------------
+    eng = ContinuousBatchingEngine(
+        model,
+        params,
+        n_slots=args.n_slots,
+        chunk_size=args.chunk,
+        max_seq_len=args.max_seq_len,
+        seed=args.seed,
+    )
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    reqs = []
+    for a in arrivals:
+        plen = int(rng.integers(8, args.prompt_len + 1))
+        gen = int(rng.integers(4, args.gen + 1))
+        reqs.append(
+            (a, rng.integers(0, cfg.vocab_size, (plen,)), gen)
+        )
+
+    # warm the trace (one tiny request), then reset telemetry
+    r = eng.submit([1, 2, 3], 2, ignore_eos=True)
+    eng.run()
+    eng.n_steps = 0
+    eng.prefill_tokens = eng.decode_tokens = 0
+    eng.expert_load[:] = 0
+    eng.max_vio_per_step.clear()
+
+    t0 = time.perf_counter()
+    pending = list(reqs)
+    n_done = 0
+    while pending or eng.scheduler.has_work:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            a, p, g = pending[0]
+            if eng.submit(p, g, ignore_eos=True, arrival_time=a) is None:
+                break  # backpressure: queue full, keep stepping
+            pending.pop(0)
+        if eng.scheduler.has_work:
+            n_done += len(eng.step())
+        elif pending:
+            time.sleep(min(0.001, pending[0][0] - now))
+    wall = time.perf_counter() - t0
+
+    total = eng.prefill_tokens + eng.decode_tokens
+    print(f"serve_stream,{1e6 * wall / max(total, 1):.2f},"
+          f"{total / wall:.0f} tok/s ({n_done} reqs, {eng.n_steps} steps)")
+    if cfg.is_moe:
+        load = eng.expert_load
+        mean = max(load.mean(), 1e-9)
+        print(f"serve_expert_maxvio,,{load.max() / mean - 1.0:.3f}")
+        print("serve_expert_load,," + "|".join(f"{x:.0f}" for x in load))
+    return 0 if speedup >= 5.0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,61 +1,76 @@
-"""Batched serving with a KV cache: prefill 8 prompts, decode 32 tokens each.
+"""Continuous batching demo: more requests than slots, variable prompt
+lengths, requests arriving mid-flight.
 
     PYTHONPATH=src python examples/serve_batched.py [--arch minimind_moe_16e]
 
-Routing stays active at decode time — with expert parallelism, serving
-utilization also depends on balanced expert loads, and the BIP gate keeps
-balancing per decode batch (its dual vector q warm-starts from training).
+Routing stays active at serve time — prefill chunks and decode tokens share
+each MoE layer's router invocation, and the BIP gate's dual vector q (warm
+from training if a checkpoint is loaded) keeps expert loads balanced per
+fused step, which is what keeps expert-parallel serving utilization high.
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.models import build_model
-from repro.serving import ServeEngine
+from repro.serving import ContinuousBatchingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minimind_moe_16e")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--gen", type=int, default=24)
     args = ap.parse_args()
 
     cfg = configs.reduced_for_smoke(args.arch, vocab_size=512)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(
+        model,
+        params,
+        n_slots=args.n_slots,
+        chunk_size=args.chunk,
+        max_seq_len=128,
+        temperature=0.8,
+    )
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
-    )
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.frontend_tokens, cfg.frontend_dim)),
-            jnp.float32,
-        )
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.enc_seq_len, cfg.frontend_dim)),
-            jnp.float32,
-        )
+    # submit an initial wave, then trickle the rest in while the pool works
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 40))
+        prompt = rng.integers(0, cfg.vocab_size, (plen,))
+        if i < args.n_slots:
+            reqs.append(eng.submit(prompt, args.gen, ignore_eos=True))
+        else:
+            reqs.append((prompt, args.gen))
 
-    eng = ServeEngine(model, params, max_seq_len=args.prompt_len + args.gen + 1)
-    cache, states = eng.start(batch)
-    logits, cache, states = eng.prefill(prompts, cache, states)
-    toks, cache, states = eng.decode(
-        logits, cache, states, args.gen, temperature=0.8, key=jax.random.PRNGKey(1)
-    )
-    print(f"arch={cfg.name} ({cfg.family}), batch={args.batch}")
-    for i in range(min(4, args.batch)):
-        print(f"  seq {i}: prompt={np.asarray(prompts[i])[:8]}... "
-              f"generated={np.asarray(toks[i])[:16]}...")
-    print(f"generated {toks.shape[0] * toks.shape[1]} tokens total")
+    late = [r for r in reqs if isinstance(r, tuple)]
+    reqs = [r for r in reqs if not isinstance(r, tuple)]
+    while eng.scheduler.has_work or late:
+        if late:  # a request shows up every other step, mid-flight
+            prompt, gen = late.pop(0)
+            reqs.append(eng.submit(prompt, gen, ignore_eos=True))
+        eng.step()
+        eng.step()
+
+    print(f"arch={cfg.name} ({cfg.family}), slots={args.n_slots}, "
+          f"requests={len(reqs)}, steps={eng.n_steps}")
+    for r in reqs[:4]:
+        print(f"  req {r.req_id}: prompt[{len(r.prompt)}] "
+              f"generated={r.output[:10]}... ({r.finish_reason})")
+    total = eng.prefill_tokens + eng.decode_tokens
+    print(f"processed {total} tokens ({eng.prefill_tokens} prefill, "
+          f"{eng.decode_tokens} decode)")
+    if cfg.is_moe:
+        load = eng.expert_load
+        print(f"per-expert load {load.astype(int).tolist()} "
+              f"(MaxVio {load.max() / max(load.mean(), 1e-9) - 1.0:.3f})")
 
 
 if __name__ == "__main__":

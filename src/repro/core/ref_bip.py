@@ -219,3 +219,57 @@ def bip_dual_update_threshold(
     q_init = q0.astype(s.dtype) + 0.0 * s[0]
     q, p = lax.fori_loop(0, n_iters, body, (q_init, p0))
     return q, p
+
+
+def bip_dual_update_masked(
+    s: jnp.ndarray,
+    q0: jnp.ndarray,
+    mask: jnp.ndarray,  # (n,) bool; False rows are invisible to the update
+    *,
+    top_k: int,
+    n_iters: int,
+    n_bisect: int = 26,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ADMM dual update computed over the REAL rows only.
+
+    Serving chunks carry padding rows for static shapes (DESIGN.md
+    §Serving); at steady-state decode they can outnumber real tokens
+    many-to-one, so letting them into the dual update would drift q toward
+    balancing uniform filler instead of real traffic. Masked rows are
+    pushed to -inf so they sink out of every order statistic, and the
+    capacity index floor(n_real·k/m) becomes traced — hence the
+    threshold/bisection order statistic (its count comparison accepts a
+    traced kth) instead of the sort-based one. With an all-True mask this
+    matches `bip_dual_update` up to bisection resolution (~6e-8).
+    """
+    n, m = s.shape
+    neg = jnp.asarray(-1e30, s.dtype)
+    n_real = jnp.sum(mask)
+    cap_idx = (n_real * top_k) // m  # traced counterpart of expert_kth_index
+    s_m = jnp.where(mask[:, None], s, neg)
+
+    def body(_, pq):
+        q, _p = pq
+        if top_k >= m:
+            p = jnp.zeros((n,), s.dtype)
+        else:
+            # masked rows give max(0, -inf) = 0: no token price
+            p = jnp.maximum(0.0, kth_largest(s_m - q[None, :], top_k, axis=-1))
+        x = s_m - p[:, None]
+        # bisection bounds from real entries only, else resolution dies
+        lo = jnp.min(jnp.where(mask[:, None], x, jnp.inf), axis=0)
+        hi = jnp.max(jnp.where(mask[:, None], x, -jnp.inf), axis=0)
+        q_new = jnp.maximum(
+            0.0,
+            kth_largest_threshold(x, cap_idx, axis=0, n_bisect=n_bisect, lo=lo, hi=hi),
+        )
+        # slack capacity (cap index past the real rows) -> price 0
+        q_new = jnp.where(cap_idx >= jnp.maximum(n_real, 1), 0.0, q_new)
+        return (q_new, p)
+
+    p0 = 0.0 * s[:, 0]
+    q_init = q0.astype(s.dtype) + 0.0 * s[0]
+    q, p = lax.fori_loop(0, n_iters, body, (q_init, p0))
+    # an all-padding invocation (idle engine step) must not move the dual
+    q = jnp.where(n_real > 0, q, q0.astype(s.dtype))
+    return q, p

@@ -54,16 +54,27 @@ def _topk_select(
     return w, idx.astype(jnp.int32)
 
 
-def _aux_loss(s: jnp.ndarray, idx: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
+def _aux_loss(
+    s: jnp.ndarray, idx: jnp.ndarray, cfg: RouterConfig, token_mask=None
+) -> jnp.ndarray:
     """L_balance = α Σ_j f_j P_j (Loss-Controlled method).
 
     f_j = m/(k n) Σ_i δ_ij  (token fraction, non-differentiable -> stopped),
     P_j = 1/n Σ_i s_ij      (mean gate score, carries the gradient).
+    With token_mask, both means run over the real rows only.
     """
     n, m = s.shape
     onehot = jax.nn.one_hot(idx, m, dtype=s.dtype)  # (n, k, m)
-    f = lax.stop_gradient(onehot.sum(axis=(0, 1))) * (m / (cfg.top_k * n))
-    p_mean = s.mean(axis=0)
+    if token_mask is not None:
+        w = token_mask.astype(s.dtype)
+        n_eff = jnp.maximum(jnp.sum(w), 1.0)
+        f = lax.stop_gradient((onehot * w[:, None, None]).sum(axis=(0, 1))) * (
+            m / (cfg.top_k * n_eff)
+        )
+        p_mean = jnp.sum(s * w[:, None], axis=0) / n_eff
+    else:
+        f = lax.stop_gradient(onehot.sum(axis=(0, 1))) * (m / (cfg.top_k * n))
+        p_mean = s.mean(axis=0)
     return cfg.aux_loss_alpha * jnp.sum(f * p_mean)
 
 
@@ -85,11 +96,16 @@ def route(
     cfg: RouterConfig,
     *,
     local_shards: int = 1,
+    token_mask=None,
 ) -> RouterOutput:
     """Route a flattened batch of tokens.
 
     logits: (n, m) router logits (pre-gating-function).
     state:  {'q': (m,)} carried vector (ADMM warm start / Loss-Free bias).
+    token_mask: optional (n,) bool — serving padding rows are False; they
+      still get selections (static shapes) but are excluded from every
+      state update and loss, so the carried q tracks real traffic only
+      even when decode-heavy chunks are mostly padding (DESIGN.md §Serving).
     """
     n, m = logits.shape
     assert m == cfg.n_experts, (m, cfg.n_experts)
@@ -99,7 +115,14 @@ def route(
     new_q = q0
 
     if cfg.strategy == "bip":
-        if local_shards > 1 and cfg.sync == "local":
+        if token_mask is not None:
+            q, _ = ref_bip.bip_dual_update_masked(
+                lax.stop_gradient(s), q0, token_mask,
+                top_k=cfg.top_k, n_iters=cfg.bip_iters,
+            )
+            corrected = s - q[None, :]
+            new_q = q
+        elif local_shards > 1 and cfg.sync == "local":
             s_grp = lax.stop_gradient(s).reshape(local_shards, n // local_shards, m)
             q_grp = jax.vmap(lambda sg: _bip_q(sg, q0, cfg))(s_grp)  # (S, m)
             corrected = (
@@ -119,15 +142,16 @@ def route(
         corrected = s + q0[None, :]
         w, idx = _topk_select(s, corrected, cfg)
         # Per-batch sign update: b += u * sign(mean_load - load_j).
-        load = lax.stop_gradient(
-            jax.nn.one_hot(idx, m, dtype=cfg.router_dtype).sum(axis=(0, 1))
-        )
+        onehot = jax.nn.one_hot(idx, m, dtype=cfg.router_dtype)
+        if token_mask is not None:
+            onehot = onehot * token_mask.astype(cfg.router_dtype)[:, None, None]
+        load = lax.stop_gradient(onehot.sum(axis=(0, 1)))
         err = load.mean() - load
         new_q = q0 + cfg.lossfree_lr * jnp.sign(err)
 
     elif cfg.strategy == "aux_loss":
         w, idx = _topk_select(s, s, cfg)
-        aux = _aux_loss(s, idx, cfg)
+        aux = _aux_loss(s, idx, cfg, token_mask)
 
     else:  # 'topk'
         w, idx = _topk_select(s, s, cfg)

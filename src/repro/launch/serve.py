@@ -1,8 +1,8 @@
-"""Serving launcher: load a checkpoint (or init fresh), serve batched
-greedy/temperature decoding.
+"""Serving launcher: load a checkpoint (or init fresh), serve a request
+stream through the continuous-batching engine (DESIGN.md §Serving).
 
     PYTHONPATH=src python -m repro.launch.serve --arch minimind-moe-16e \
-        --reduced --batch 8 --gen 32 [--ckpt /path/step_N.npz]
+        --reduced --requests 16 --n-slots 8 --chunk 32 [--ckpt /path/step_N.npz]
 """
 from __future__ import annotations
 
@@ -17,18 +17,21 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-seq-len", type=int, default=0, help="0 = auto")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args(argv)
 
     import jax
-    import jax.numpy as jnp
 
     from repro import configs
     from repro.models import build_model
-    from repro.serving import ServeEngine
+    from repro.serving import ContinuousBatchingEngine
 
     cfg = configs.reduced_for_smoke(args.arch) if args.reduced else configs.get(args.arch)
     model = build_model(cfg)
@@ -40,30 +43,40 @@ def main(argv=None):
     else:
         params = model.init(jax.random.PRNGKey(0))
 
+    max_seq_len = args.max_seq_len or (args.prompt_len + args.gen + 1)
+    eng = ContinuousBatchingEngine(
+        model,
+        params,
+        n_slots=args.n_slots,
+        chunk_size=args.chunk,
+        max_seq_len=max_seq_len,
+        temperature=args.temperature,
+        eos_id=args.eos_id,
+    )
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
-    )
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.frontend_tokens, cfg.frontend_dim)),
-            jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal((args.batch, cfg.enc_seq_len, cfg.frontend_dim)),
-            jnp.float32)
+    reqs = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
+        prompt = rng.integers(0, cfg.vocab_size, (plen,))
+        while True:
+            r = eng.submit(prompt, args.gen, ignore_eos=args.eos_id is None)
+            if r is not None:
+                break
+            eng.step()  # waiting queue full: drain a step, then retry
+        reqs.append(r)
+    eng.run()
 
-    eng = ServeEngine(model, params, max_seq_len=args.prompt_len + args.gen + 1)
-    cache, states = eng.start(batch)
-    logits, cache, states = eng.prefill(prompts, cache, states)
-    toks, _, _ = eng.decode(
-        logits, cache, states, args.gen,
-        temperature=args.temperature, key=jax.random.PRNGKey(1),
+    for r in reqs[:4]:
+        print(f"req {r.req_id}: prompt[{len(r.prompt)}] -> {r.output} ({r.finish_reason})")
+    total = eng.prefill_tokens + eng.decode_tokens
+    print(
+        f"served {len(reqs)} requests over {eng.n_slots} slots in {eng.n_steps} "
+        f"steps ({total} tokens: {eng.prefill_tokens} prefill / {eng.decode_tokens} decode)"
     )
-    for i in range(min(args.batch, 4)):
-        print(f"seq {i}: {np.asarray(toks[i]).tolist()}")
-    print(f"served {args.batch} sequences x {args.gen} tokens")
+    if cfg.is_moe:
+        load = eng.expert_load
+        mean = max(load.mean(), 1e-9)
+        print(f"per-expert load: {load.astype(int).tolist()} (MaxVio {load.max()/mean - 1.0:.3f})")
     return 0
 
 

@@ -206,63 +206,104 @@ def attention(
     return jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(cfg.compute_dtype))
 
 
-def attention_decode(
+def attention_chunk(
     params: Params,
-    x: jnp.ndarray,  # (B, 1, d)
+    x: jnp.ndarray,  # (B, C, d)
     cache: Dict[str, jnp.ndarray],
     cfg: ModelConfig,
     *,
     layer_kind: str = "global",
+    lengths: jnp.ndarray = None,  # (B,) int32, tokens valid per row (0..C)
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """One decode step against a KV cache.
+    """Cached attention advancing each row by `lengths[i]` tokens at once.
 
-    Cache layout: {'k': (B, C, KV, D), 'v': same, 'pos': (B,) int32 next
-    position}. For local layers C == window_size and the cache is a ring
-    buffer (position modulo window); for global layers C == max_seq_len.
+    The chunked-prefill core (DESIGN.md §Serving): row i's first lengths[i]
+    columns are real tokens starting at absolute position cache['pos'][i];
+    the rest is padding. Valid K/V are written into the cache in bulk
+    (out-of-bounds scatter indices drop the padded columns) and the chunk
+    attends with a per-query causal mask, so rows at different sequence
+    offsets — including pure decode rows with lengths[i] == 1 — share one
+    traced program. Global layers attend against the updated cache; ring
+    (sliding-window) layers attend against the pre-update ring concatenated
+    with the in-chunk keys, because the bulk write clobbers keys still
+    inside earlier in-chunk queries' windows. Padded output columns are
+    garbage and must be masked by the caller.
+
+    For local layers C <= window_size is required (asserted; the engine
+    clamps chunk_size), so in-chunk writes never collide in the ring.
     """
-    b = x.shape[0]
-    hd = cfg.resolved_head_dim
+    b, c, _ = x.shape
     theta = cfg.rope_theta
     window = 0
     if layer_kind == "local":
         window = cfg.window_size
         if cfg.rope_local_theta:
             theta = cfg.rope_local_theta
+    if lengths is None:
+        lengths = jnp.full((b,), c, jnp.int32)
 
-    pos = cache["pos"]  # (B,)
+    pos0 = cache["pos"]  # (B,)
+    q_pos = pos0[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    valid = jnp.arange(c)[None, :] < lengths[:, None]  # (B, C)
+
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cfg.compute_dtype))
     k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cfg.compute_dtype))
     v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cfg.compute_dtype))
     if cfg.qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.rms_norm_eps)
         k_new = rmsnorm(params["k_norm"], k_new, cfg.rms_norm_eps)
-    q = apply_rope(q, pos[:, None], theta)
-    k_new = apply_rope(k_new, pos[:, None], theta)
+    q = apply_rope(q, q_pos, theta)
+    k_new = apply_rope(k_new, q_pos, theta)
 
     cap = cache["k"].shape[1]
-    slot = pos % cap if window > 0 else pos  # ring buffer for local layers
-    k = jax.vmap(lambda c, n, i: lax.dynamic_update_slice(c, n, (i, 0, 0)))(
-        cache["k"], k_new.astype(cache["k"].dtype), slot
-    )
-    v = jax.vmap(lambda c, n, i: lax.dynamic_update_slice(c, n, (i, 0, 0)))(
-        cache["v"], v_new.astype(cache["v"].dtype), slot
-    )
-
-    # key positions: for a ring buffer, slot t holds absolute position
-    # floor((pos - 1 - t') ...); reconstruct directly instead:
-    idx = jnp.arange(cap)[None, :]  # (1, C)
     if window > 0:
-        # slot i holds the latest absolute position p with p % cap == i, p <= pos
-        k_pos = pos[:, None] - ((pos[:, None] - idx) % cap)
-        valid = (k_pos >= 0) & (k_pos > pos[:, None] - window) & (k_pos <= pos[:, None])
+        assert c <= cap, f"chunk {c} must fit the ring buffer (window {cap})"
+        write_idx = q_pos % cap
     else:
-        k_pos = idx
-        valid = idx <= pos[:, None]
-    mask = valid[:, None, None, :]  # (B, 1, 1, C)
+        write_idx = q_pos
+    # padded columns scatter out of bounds -> dropped
+    write_idx = jnp.where(valid, write_idx, cap)
+    k = jax.vmap(lambda cch, n, i: cch.at[i].set(n, mode="drop"))(
+        cache["k"], k_new.astype(cache["k"].dtype), write_idx
+    )
+    v = jax.vmap(lambda cch, n, i: cch.at[i].set(n, mode="drop"))(
+        cache["v"], v_new.astype(cache["v"].dtype), write_idx
+    )
 
-    y = _attend(q, k, v.astype(cfg.compute_dtype), mask, cfg.attn_logit_softcap, cfg.compute_dtype)
+    idx = jnp.arange(cap)[None, :]  # (1, cap)
+    if window > 0:
+        # Ring layers must attend against the PRE-update ring plus the
+        # in-chunk keys: writing position p' overwrites the key at p'-cap,
+        # which is still inside the window of every earlier in-chunk query
+        # p in [p'-cap+1, p'-1] — a bulk write-then-attend would clobber it.
+        prev = pos0 - 1  # (B,) latest position already in the ring
+        k_pos = prev[:, None] - ((prev[:, None] - idx) % cap)  # (B, cap)
+        ring_ok = (
+            (k_pos >= 0)[:, None, :]
+            & (k_pos[:, None, :] <= q_pos[..., None])
+            & (k_pos[:, None, :] > q_pos[..., None] - window)
+        )  # (B, C, cap)
+        chunk_ok = (
+            (q_pos[:, None, :] <= q_pos[..., None])
+            & (q_pos[:, None, :] > q_pos[..., None] - window)
+            & valid[:, None, :]
+        )  # (B, C, C)
+        mask = jnp.concatenate([ring_ok, chunk_ok], axis=-1) & valid[..., None]
+        k_att = jnp.concatenate(
+            [cache["k"].astype(cfg.compute_dtype), k_new], axis=1
+        )
+        v_att = jnp.concatenate(
+            [cache["v"].astype(cfg.compute_dtype), v_new], axis=1
+        )
+    else:
+        k_pos = jnp.broadcast_to(idx, (b, cap))
+        mask = (k_pos[:, None, :] <= q_pos[..., None]) & valid[..., None]
+        k_att, v_att = k, v.astype(cfg.compute_dtype)
+    mask = mask[:, None]  # (B, 1, C, cap[+C])
+
+    y = _attend(q, k_att, v_att, mask, cfg.attn_logit_softcap, cfg.compute_dtype)
     out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(cfg.compute_dtype))
-    return out, {"k": k, "v": v, "pos": pos + 1}
+    return out, {"k": k, "v": v, "pos": pos0 + lengths}
 
 
 def init_attention_cache(

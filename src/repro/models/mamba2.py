@@ -268,50 +268,68 @@ def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarr
     }
 
 
-def mamba_decode(
+def mamba_chunk(
     params: Params,
-    xres: jnp.ndarray,  # (B, 1, d)
+    xres: jnp.ndarray,  # (B, C, d) (already normed)
     cache: Dict[str, jnp.ndarray],
     cfg: ModelConfig,
+    *,
+    lengths: jnp.ndarray = None,  # (B,) tokens valid per row (0..C)
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """One recurrent decode step."""
+    """Advance the recurrent state by `lengths[i]` tokens per row at once.
+
+    The single-token decode path is the C=1 case (DESIGN.md §Serving): the
+    conv history and SSM state come from the cache, the chunk runs through
+    the same SSD kernel as training with `init_state`, and padding is
+    neutralized by forcing dt -> 0 there (decay exp(0)=1, increment dt·x=0:
+    the state is frozen through padded steps, so the final state equals the
+    state after exactly lengths[i] real tokens). The new conv cache gathers
+    the last d_conv-1 *valid* inputs per row, skipping padding.
+    """
     dm = dims(cfg)
+    bsz, c, _ = xres.shape
+    if lengths is None:
+        lengths = jnp.full((bsz,), c, jnp.int32)
+    valid = jnp.arange(c)[None, :] < lengths[:, None]  # (B, C)
+
     zxbcdt = jnp.einsum(
         "bsd,de->bse", xres, params["in_proj"].astype(cfg.compute_dtype)
     )
     z, xbc_new, dt = _split_proj(zxbcdt, dm)
 
-    # conv over [cached K-1 inputs | new input]
-    hist = jnp.concatenate([cache["conv"], xbc_new.astype(cache["conv"].dtype)], axis=1)
+    kw = dm["d_conv"]
+    hist = jnp.concatenate(
+        [cache["conv"], xbc_new.astype(cache["conv"].dtype)], axis=1
+    )  # (B, kw-1+C, conv_dim); entry (kw-1)+t is the input at chunk offset t
     w = params["conv_w"].astype(cfg.compute_dtype)
-    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(
-        cfg.compute_dtype
+    conv_out = (
+        sum(hist[:, i : i + c, :].astype(cfg.compute_dtype) * w[i] for i in range(kw))
+        + params["conv_b"].astype(cfg.compute_dtype)
     )
-    xbc = jax.nn.silu(conv_out)[:, None, :]  # (B,1,C)
-    new_conv = hist[:, 1:]
+    xbc = jax.nn.silu(conv_out)  # (B, C, conv_dim)
+    # last kw-1 valid inputs: chunk offsets lengths-(kw-1)..lengths-1, i.e.
+    # hist indices lengths..lengths+kw-2 (lengths==0 reproduces the old cache)
+    gather_idx = lengths[:, None] + jnp.arange(kw - 1)[None, :]
+    new_conv = jax.vmap(lambda h, i: h[i])(hist, gather_idx)
 
     di, ns, ng = dm["d_inner"], dm["d_state"], dm["n_groups"]
     h, p = dm["n_heads"], dm["head_dim"]
-    bsz = xres.shape[0]
-    xs = xbc[..., :di].reshape(bsz, h, p).astype(jnp.float32)
-    bs = jnp.repeat(
-        xbc[..., di : di + ng * ns].reshape(bsz, ng, ns), h // ng, axis=1
-    ).astype(jnp.float32)
-    cs = jnp.repeat(
-        xbc[..., di + ng * ns :].reshape(bsz, ng, ns), h // ng, axis=1
-    ).astype(jnp.float32)
-    dt1 = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + params["dt_bias"])  # (B,H)
+    xs = xbc[..., :di]
+    bs = xbc[..., di : di + ng * ns]
+    cs = xbc[..., di + ng * ns :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.where(valid[..., None], dt, 0.0)  # freeze state through padding
 
-    a = -jnp.exp(params["A_log"])
-    decay = jnp.exp(dt1 * a[None, :])[..., None, None]  # (B,H,1,1)
-    st = cache["ssm"] * decay + bs[..., None] * (dt1[..., None] * xs)[..., None, :]
-    y = jnp.einsum("bhn,bhnp->bhp", cs, st) + xs * params["D"][None, :, None]
-
-    y = _gated_norm(
-        y.reshape(bsz, 1, di).astype(cfg.compute_dtype),
-        z,
-        params["norm_scale"],
-        cfg.rms_norm_eps,
+    y, st = ssd_chunked(
+        xs.reshape(bsz, c, h, p),
+        dt,
+        params["A_log"],
+        bs.reshape(bsz, c, ng, ns),
+        cs.reshape(bsz, c, ng, ns),
+        params["D"],
+        chunk=min(cfg.ssm.chunk_size, c),
+        init_state=cache["ssm"],
     )
+    y = _gated_norm(y.reshape(bsz, c, di), z, params["norm_scale"], cfg.rms_norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(cfg.compute_dtype))
     return out, {"ssm": st, "conv": new_conv}

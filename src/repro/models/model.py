@@ -87,6 +87,16 @@ def _apply_encoder(
     return common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
 
 
+def _merge_load(load_total, vio_max, ld, m_load):
+    """Fold one MoE layer's per-expert dispatch counts into the running
+    (total load, worst per-layer MaxVio) pair. MaxVio = max/mean - 1, the
+    paper's metric (same convention as core.metrics.balance_metrics)."""
+    if ld is None:
+        return load_total, vio_max
+    mean = jnp.maximum(jnp.sum(ld) / m_load, 1e-9)
+    return load_total + ld, jnp.maximum(vio_max, jnp.max(ld) / mean - 1.0)
+
+
 # --------------------------------------------------------------- model
 
 
@@ -199,12 +209,33 @@ class Model:
     ) -> Params:
         """Decode caches mirroring the stack layout; cross-attn K/V are
         precomputed from the encoder output here (static per request)."""
+        return self._build_cache(
+            params, batch["tokens"].shape[0], seq_len, self._encode(params, batch)
+        )
+
+    def init_slot_cache(self, params: Params, n_slots: int, max_seq_len: int) -> Params:
+        """Slot-pool cache for the continuous-batching engine (DESIGN.md
+        §Serving): one cache row per batch slot, no request batch needed.
+        Slots are recycled across requests via `reset_slot`; per-slot 'pos'
+        indices let slots at different sequence offsets share one traced
+        step. Token-only families; encdec needs per-request encoder K/V."""
+        assert not self.cfg.n_enc_layers, "slot cache: encdec not supported"
+        return self._build_cache(params, n_slots, max_seq_len, None)
+
+    @staticmethod
+    def reset_slot(cache: Params, slot: jnp.ndarray) -> Params:
+        """Zero one slot's rows across every cache leaf (K/V, positions,
+        SSM/conv state) without retracing — `slot` is a traced index, so a
+        single jitted reset serves the whole pool."""
+        return jax.tree.map(lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)), cache)
+
+    def _build_cache(
+        self, params: Params, bsz: int, seq_len: int, enc_out
+    ) -> Params:
         cfg = self.cfg
         period, n_groups, remainder = stack._group_layout(cfg)
         kinds = cfg.layer_kinds()
-        bsz = batch["tokens"].shape[0]
         kv_dtype = cfg.compute_dtype
-        enc_out = self._encode(params, batch)
 
         def one_cache(mixer_kind, layer_params=None):
             c: Dict[str, jnp.ndarray] = {}
@@ -251,18 +282,30 @@ class Model:
                 )
         return {"blocks": caches}
 
-    def _apply_layer_decode(
-        self, p, x, cfg, mixer_kind, ffn_kind, cache, router_state
+    def _apply_layer_chunk(
+        self, p, x, cfg, mixer_kind, ffn_kind, cache, router_state, lengths
     ):
+        """One layer over a (B, C) token chunk against the slot cache.
+
+        `lengths` is (B,) valid-token counts, or None meaning every column is
+        real (the decode_step / dryrun path — keeps the MoE dispatch
+        unmasked and therefore expert-parallel safe). Returns
+        (x, new_cache, new_router_state, aux, load) with load the per-expert
+        dispatch counts of this layer's real tokens ((m,) or None).
+        """
         base = mixer_kind.replace("+shared", "")
         new_cache = dict(cache)
+        valid = None
+        if lengths is not None:
+            valid = jnp.arange(x.shape[1])[None, :] < lengths[:, None]  # (B, C)
         if base in ("global", "local"):
-            h, attn_cache = common.attention_decode(
+            h, attn_cache = common.attention_chunk(
                 p["attn"],
                 common.rmsnorm(p["pre_norm"], x, cfg.rms_norm_eps),
                 {"k": cache["k"], "v": cache["v"], "pos": cache["pos"]},
                 cfg,
                 layer_kind=base,
+                lengths=lengths,
             )
             new_cache.update(attn_cache)
             x = x + stack._maybe_post(p, "post_attn_norm", h, cfg)
@@ -270,22 +313,30 @@ class Model:
                 xq = common.rmsnorm(p["cross_norm"], x, cfg.rms_norm_eps)
                 dt = cfg.compute_dtype
                 q = jnp.einsum("bsd,dhk->bshk", xq, p["cross"]["wq"].astype(dt))
-                mask = jnp.ones((1, 1, 1, cache["ck"].shape[1]), bool)
+                se = cache["ck"].shape[1]
+                if valid is None:
+                    mask = jnp.ones((1, 1, x.shape[1], se), bool)
+                else:
+                    mask = jnp.broadcast_to(
+                        valid[:, None, :, None], (x.shape[0], 1, x.shape[1], se)
+                    )
                 y = common._attend(q, cache["ck"], cache["cv"], mask, 0.0, dt)
                 x = x + jnp.einsum(
                     "bshk,hkd->bsd", y, p["cross"]["wo"].astype(dt)
                 )
         else:
-            h, mcache = mamba2.mamba_decode(
+            h, mcache = mamba2.mamba_chunk(
                 p["mamba"],
                 common.rmsnorm(p["pre_norm"], x, cfg.rms_norm_eps),
                 {"ssm": cache["ssm"], "conv": cache["conv"]},
                 cfg,
+                lengths=lengths,
             )
             new_cache.update(mcache)
             x = x + h
 
         aux = jnp.zeros((), jnp.float32)
+        load = None
         if ffn_kind == "dense":
             h = common.mlp(
                 p["mlp"], common.rmsnorm(p["ffn_norm"], x, cfg.rms_norm_eps), cfg
@@ -294,10 +345,17 @@ class Model:
         elif ffn_kind == "moe":
             xin = common.rmsnorm(p["ffn_norm"], x, cfg.rms_norm_eps)
             b, s, d = xin.shape
-            flat = xin.reshape(b * s, d)
-            y, router_state, aux, _ = moe.moe_ffn(
-                p["moe"], flat, router_state, cfg, self.mesh_ctx
+            if valid is None:
+                flat = xin.reshape(b * s, d)
+                token_mask = None
+            else:
+                # zero padded rows so they router-score as neutral uniform
+                flat = (xin * valid[..., None].astype(xin.dtype)).reshape(b * s, d)
+                token_mask = valid.reshape(b * s)
+            y, router_state, aux, moe_mets = moe.moe_ffn(
+                p["moe"], flat, router_state, cfg, self.mesh_ctx, token_mask=token_mask
             )
+            load = moe_mets["load"]
             h = y.reshape(b, s, d)
             if cfg.dense_residual and "mlp" in p:
                 h = h + common.mlp(p["mlp"], xin, cfg)
@@ -307,12 +365,13 @@ class Model:
 
         if mixer_kind.endswith("+shared"):
             sp = self._shared_params
-            h, sc = common.attention_decode(
+            h, sc = common.attention_chunk(
                 sp["attn"],
                 common.rmsnorm(sp["pre_norm"], x, cfg.rms_norm_eps),
                 {"k": cache["sk"], "v": cache["sv"], "pos": cache["spos"]},
                 cfg,
                 layer_kind="global",
+                lengths=lengths,
             )
             new_cache.update({"sk": sc["k"], "sv": sc["v"], "spos": sc["pos"]})
             x = x + h
@@ -320,32 +379,53 @@ class Model:
                 sp["mlp"], common.rmsnorm(sp["ffn_norm"], x, cfg.rms_norm_eps), cfg
             )
             x = x + h
-        return x, new_cache, router_state, aux
+        return x, new_cache, router_state, aux, load
 
-    def decode_step(
+    def prefill_chunk(
         self,
         params: Params,
-        tokens: jnp.ndarray,  # (B, 1) int32
+        tokens: jnp.ndarray,  # (B, C) int32
         cache: Params,
         router_states: list,
-    ) -> Tuple[jnp.ndarray, Params, list]:
-        """One token for every sequence in the batch."""
+        lengths: Optional[jnp.ndarray] = None,  # (B,) valid counts; None = all C
+    ) -> Tuple[jnp.ndarray, Params, list, Dict[str, jnp.ndarray]]:
+        """Advance every slot by up to C tokens in ONE fused, trace-once step.
+
+        The continuous-batching core (DESIGN.md §Serving): prefilling slots
+        carry their next <=C prompt tokens, decoding slots carry 1 sampled
+        token, idle slots carry 0 — all through the same program, so mixed
+        prefill/decode traffic shares each MoE layer's router invocation and
+        the BIP dual vector q keeps balancing across the whole batch.
+        Returns (logits (B, C, vocab), cache, router_states, metrics) where
+        metrics['moe_load'] is the per-expert dispatch count of real tokens
+        summed over MoE layers and metrics['max_vio'] the worst per-layer
+        violation. Padded logit columns are garbage; callers index
+        lengths-1.
+        """
         cfg = self.cfg
         period, n_groups, remainder = stack._group_layout(cfg)
         kinds = cfg.layer_kinds()
         self._shared_params = params["stack"].get("shared")
         x = common.embed(params["embed"], tokens, cfg)
+        m_load = cfg.routing.n_experts if cfg.is_moe else 1
 
-        def scan_body(x, per_group):
-            lp, lc, ls = per_group
+        def apply_period(x, lp, lc, ls):
             new_caches, new_states = [], []
+            load = jnp.zeros((m_load,), jnp.float32)
+            vio = jnp.zeros((), jnp.float32)
             for j in range(period):
-                x, nc, st, _ = self._apply_layer_decode(
-                    lp[j], x, cfg, kinds[j][0], kinds[j][1], lc[j], ls[j]
+                x, nc, st, _, ld = self._apply_layer_chunk(
+                    lp[j], x, cfg, kinds[j][0], kinds[j][1], lc[j], ls[j], lengths
                 )
                 new_caches.append(nc)
                 new_states.append(st)
-            return x, (new_caches, new_states)
+                load, vio = _merge_load(load, vio, ld, m_load)
+            return x, new_caches, new_states, load, vio
+
+        def scan_body(x, per_group):
+            lp, lc, ls = per_group
+            x, new_caches, new_states, load, vio = apply_period(x, lp, lc, ls)
+            return x, (new_caches, new_states, load, vio)
 
         if n_groups > 0:
             lp = [
@@ -362,12 +442,18 @@ class Model:
                 else jax.tree.map(lambda a: a[:n_groups], router_states[j])
                 for j in range(period)
             ]
-            x, (new_caches, new_states) = lax.scan(scan_body, x, (lp, lc, ls))
+            x, (new_caches, new_states, loads, vios) = lax.scan(
+                scan_body, x, (lp, lc, ls)
+            )
+            load_total = jnp.sum(loads, axis=0)
+            vio_max = jnp.max(vios) if n_groups else jnp.zeros((), jnp.float32)
         else:
             new_caches = [None] * period
             new_states = [None] * period
+            load_total = jnp.zeros((m_load,), jnp.float32)
+            vio_max = jnp.zeros((), jnp.float32)
 
-        # remainder layers
+        # remainder layers (tail prefix of the period), applied once
         rem_caches, rem_states = [], []
         for j in range(remainder):
             lp_j = jax.tree.map(lambda a: a[n_groups], params["stack"]["blocks"][j])
@@ -377,11 +463,12 @@ class Model:
                 if router_states[j] is None
                 else jax.tree.map(lambda a: a[n_groups], router_states[j])
             )
-            x, nc, st, _ = self._apply_layer_decode(
-                lp_j, x, cfg, kinds[j][0], kinds[j][1], lc_j, ls_j
+            x, nc, st, _, ld = self._apply_layer_chunk(
+                lp_j, x, cfg, kinds[j][0], kinds[j][1], lc_j, ls_j, lengths
             )
             rem_caches.append(nc)
             rem_states.append(st)
+            load_total, vio_max = _merge_load(load_total, vio_max, ld, m_load)
 
         out_caches, out_states = [], []
         for j in range(period):
@@ -404,7 +491,21 @@ class Model:
 
         x = common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
         logits = common.unembed(params["embed"], x, cfg)
-        return logits, {"blocks": out_caches}, out_states
+        mets = {"moe_load": load_total, "max_vio": vio_max}
+        return logits, {"blocks": out_caches}, out_states, mets
+
+    def decode_step(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,  # (B, 1) int32
+        cache: Params,
+        router_states: list,
+    ) -> Tuple[jnp.ndarray, Params, list]:
+        """One token for every sequence in the batch (prefill_chunk, C=1)."""
+        logits, cache, states, _ = self.prefill_chunk(
+            params, tokens, cache, router_states
+        )
+        return logits, cache, states
 
     def prefill(
         self,

@@ -98,8 +98,20 @@ def _flat_axis_index(mesh, axes: Tuple[str, ...]):
 EP2D_TOKEN_THRESHOLD = 32768
 
 
-def moe_ffn(params, x, router_state, cfg, mesh_ctx):
-    """Dispatch to the configured implementation ('auto' picks by size)."""
+def moe_ffn(params, x, router_state, cfg, mesh_ctx, token_mask=None):
+    """Dispatch to the configured implementation ('auto' picks by size).
+
+    token_mask (n,) bool marks real tokens; False rows (serving padding)
+    still receive selections (static shapes) but are excluded from
+    dispatch, capacity, the router-state update, and the load metrics.
+    Only the local path supports it (the serving engine is single-device
+    for now — DESIGN.md §Serving).
+    """
+    if token_mask is not None:
+        assert mesh_ctx is None or not getattr(mesh_ctx, "use_ep", False), (
+            "token_mask is only supported on the single-device path"
+        )
+        return moe_ffn_local(params, x, router_state, cfg, token_mask=token_mask)
     if mesh_ctx is not None and getattr(mesh_ctx, "use_ep", False):
         impl_name = cfg.routing.moe_impl
         if impl_name == "auto":
@@ -128,19 +140,27 @@ def _dispatch_plan(
     expert_index: jnp.ndarray,  # (n, k) int32
     n_experts: int,
     capacity: int,
+    token_mask: Optional[jnp.ndarray] = None,  # (n,) bool; False never dispatches
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Position of every (token, slot) inside its expert's capacity queue.
 
     Returns (pos (n, k) int32, keep (n, k) bool). Queue order is token order
-    (earlier tokens win capacity), slot-major within a token.
+    (earlier tokens win capacity), slot-major within a token. Masked tokens
+    (serving padding) are excluded from the queues entirely: they neither
+    occupy capacity nor displace real tokens, so a padded batch dispatches
+    identically to the same real tokens alone.
     """
     n, k = expert_index.shape
     flat = expert_index.reshape(-1)  # (n*k,) — token-major, slot-minor
     onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (n*k, m)
+    if token_mask is not None:
+        onehot = onehot * jnp.repeat(token_mask, k).astype(jnp.int32)[:, None]
     pos_flat = jnp.cumsum(onehot, axis=0) - 1  # position within expert queue
     pos = jnp.take_along_axis(pos_flat, flat[:, None], axis=1)[:, 0]
     pos = pos.reshape(n, k)
     keep = pos < capacity
+    if token_mask is not None:
+        keep = keep & token_mask[:, None]
     return pos, keep
 
 
@@ -166,6 +186,7 @@ def moe_ffn_local(
     x: jnp.ndarray,  # (n, d) flattened tokens
     router_state: Dict[str, jnp.ndarray],
     cfg: ModelConfig,
+    token_mask: Optional[jnp.ndarray] = None,  # (n,) bool
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Reference path. Returns (y, new_router_state, aux_loss, metrics)."""
     n, d = x.shape
@@ -174,8 +195,8 @@ def moe_ffn_local(
     rcfg = router_config(cfg)
 
     logits = jnp.einsum("nd,dm->nm", x.astype(jnp.float32), params["w_router"])
-    out = route(logits, router_state, rcfg)
-    pos, keep = _dispatch_plan(out.expert_index, m, cap)
+    out = route(logits, router_state, rcfg, token_mask=token_mask)
+    pos, keep = _dispatch_plan(out.expert_index, m, cap, token_mask)
 
     # scatter tokens into (m, cap, d)
     e_flat = out.expert_index.reshape(-1)
@@ -194,7 +215,18 @@ def moe_ffn_local(
     w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
     contrib = jnp.where(keep_flat[:, None], gathered * w_flat, 0.0)
     y_tok = contrib.reshape(n, cfg.routing.top_k, d).sum(axis=1)
-    return y_tok, out.state, out.aux_loss, out.metrics
+    mets = out.metrics
+    if token_mask is not None:
+        # balance metrics over the real tokens only (padding routes as
+        # uniform filler and would flatten the reported load)
+        onehot = jax.nn.one_hot(out.expert_index, m, dtype=jnp.float32)
+        load = jnp.sum(onehot * token_mask[:, None, None], axis=(0, 1))
+        mean_load = jnp.maximum(
+            jnp.sum(token_mask) * cfg.routing.top_k / m, 1e-9
+        )
+        mets = dict(mets)
+        mets.update(load=load, max_vio=jnp.max(load) / mean_load - 1.0)
+    return y_tok, out.state, out.aux_loss, mets
 
 
 # ------------------------------------------------------ expert parallel

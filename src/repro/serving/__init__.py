@@ -1,4 +1,5 @@
-"""repro.serving — batched KV-cache serving."""
-from repro.serving.engine import ServeEngine, greedy_generate
+"""repro.serving — continuous-batching engine + request scheduler."""
+from repro.serving.engine import ContinuousBatchingEngine, greedy_generate
+from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["ServeEngine", "greedy_generate"]
+__all__ = ["ContinuousBatchingEngine", "Scheduler", "Request", "greedy_generate"]

@@ -1,80 +1,250 @@
-"""Batched serving engine: prefill-by-decode + jit'd decode steps.
+"""Continuous-batching serving engine (DESIGN.md §Serving).
 
-Small but real: fixed-batch continuous decode with greedy/temperature
-sampling, KV ring buffers for sliding-window layers, recurrent state for
-SSM layers, and per-step routing (the BIP gate keeps balancing at inference,
-which matters for expert-parallel serving utilization).
+Replaces the token-at-a-time ServeEngine: requests are admitted from a FIFO
+queue into a fixed pool of batch slots, every slot advances by up to
+`chunk_size` tokens per step through ONE jit'd `serve_step` — prefilling
+slots consume their next prompt chunk, decoding slots their last sampled
+token, idle slots are masked out. Static shapes (n_slots, chunk_size) mean
+the whole engine runs trace-once; per-slot cache positions let sequences at
+different offsets coexist; the BIP router's dual vector q threads through
+every step, so expert loads stay balanced under mixed prefill/decode
+traffic — the paper's systems payoff at inference time.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.scheduler import DECODE, PREFILL, Request, Scheduler
 
 
-@dataclasses.dataclass
-class ServeEngine:
-    model: Model
-    params: Any
-    max_seq_len: int = 2048
+class ContinuousBatchingEngine:
+    """Slot-pooled serving with chunked prefill fused into the decode step."""
 
-    def __post_init__(self):
-        self._decode = jax.jit(self.model.decode_step)
-
-    def start(self, batch: Dict[str, jnp.ndarray]):
-        cache = self.model.init_cache(self.params, batch, self.max_seq_len)
-        states = self.model.init_router_states()
-        return cache, states
-
-    def prefill(self, prompts: jnp.ndarray, cache, states):
-        """Feed prompt tokens one step at a time (teacher forcing)."""
-        logits = None
-        for t in range(prompts.shape[1]):
-            logits, cache, states = self._decode(
-                self.params, prompts[:, t : t + 1], cache, states
-            )
-        return logits, cache, states
-
-    def decode(
+    def __init__(
         self,
-        last_logits: jnp.ndarray,
-        cache,
-        states,
-        n_steps: int,
+        model: Model,
+        params: Any,
         *,
+        n_slots: int = 8,
+        chunk_size: int = 32,
+        max_seq_len: int = 2048,
+        eos_id: Optional[int] = None,
         temperature: float = 0.0,
-        key=None,
-    ) -> Tuple[jnp.ndarray, Any, Any]:
-        """Generate n_steps tokens. Returns (tokens (B, n_steps), cache, states)."""
-        toks = []
-        logits = last_logits
-        key = key if key is not None else jax.random.PRNGKey(0)
-        for i in range(n_steps):
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+        max_waiting: int = 256,
+        seed: int = 0,
+    ):
+        cfg = model.cfg
+        assert not cfg.n_enc_layers and not cfg.frontend_dim, (
+            "continuous batching serves token-only families; use "
+            "greedy_generate's legacy path for encdec/vlm"
+        )
+        if cfg.window_size and any(k == "local" for k, _ in cfg.layer_kinds()):
+            # a chunk must fit the sliding-window ring buffer, whose capacity
+            # is min(window, max_seq_len) (common.init_attention_cache)
+            chunk_size = min(chunk_size, cfg.window_size, max_seq_len)
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.chunk_size = chunk_size
+        self.max_seq_len = max_seq_len
+        self.eos_id = eos_id
+        self.scheduler = Scheduler(n_slots, max_waiting=max_waiting)
+
+        self.cache = model.init_slot_cache(params, n_slots, max_seq_len)
+        self.router_states = model.init_router_states()
+        self._rng = jax.random.PRNGKey(seed)
+        self._reset = jax.jit(model.reset_slot)
+
+        def serve_step(params, cache, states, tokens, lengths, rng):
+            logits, cache, states, mets = model.prefill_chunk(
+                params, tokens, cache, states, lengths
+            )
+            idx = jnp.maximum(lengths - 1, 0)
+            last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+            if temperature > 0.0:
+                nxt = jax.random.categorical(rng, last / temperature, axis=-1)
             else:
-                nxt = jnp.argmax(logits[:, -1:], axis=-1)
-            nxt = nxt.astype(jnp.int32)
-            toks.append(nxt)
-            logits, cache, states = self._decode(self.params, nxt, cache, states)
-        return jnp.concatenate(toks, axis=1), cache, states
+                nxt = jnp.argmax(last, axis=-1)
+            return nxt.astype(jnp.int32), cache, states, mets
+
+        self._serve_step = jax.jit(serve_step)
+
+        # telemetry (read by benchmarks/serve_throughput.py)
+        self.n_steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.expert_load = np.zeros(
+            (cfg.routing.n_experts if cfg.is_moe else 1,), np.float64
+        )
+        self.max_vio_per_step: List[float] = []
+
+    # -------------------------------------------------------------- intake
+
+    def submit(
+        self,
+        prompt: Sequence[int],
+        max_new_tokens: int,
+        *,
+        eos_id: Optional[int] = None,
+        ignore_eos: bool = False,
+        arrival_time: float = 0.0,
+    ) -> Optional[Request]:
+        """Queue one request. Returns it, or None under backpressure
+        (bounded waiting queue full — retry after stepping the engine)."""
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        assert len(prompt) < self.max_seq_len, "prompt does not fit the cache"
+        req = Request(
+            prompt=prompt,
+            max_new_tokens=max_new_tokens,
+            eos_id=eos_id,
+            ignore_eos=ignore_eos,
+            arrival_time=arrival_time,
+        )
+        return req if self.scheduler.submit(req) else None
+
+    # ---------------------------------------------------------------- step
+
+    def step(self) -> List[Request]:
+        """One fused serve step. Returns requests completed this step."""
+        now = time.perf_counter()
+        for slot_idx, _req in self.scheduler.admit(now):
+            self.cache = self._reset(self.cache, jnp.asarray(slot_idx))
+
+        b, c = self.n_slots, self.chunk_size
+        tokens = np.zeros((b, c), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        plan: List[tuple] = []  # (slot_idx, slot, kind, n_tokens)
+        for i, slot in self.scheduler.active():
+            req = slot.request
+            if not slot.prompt_done:
+                chunk = req.prompt[slot.n_prefilled : slot.n_prefilled + c]
+                tokens[i, : len(chunk)] = chunk
+                lengths[i] = len(chunk)
+                plan.append((i, slot, PREFILL, len(chunk)))
+            else:
+                tokens[i, 0] = req.output[-1]
+                lengths[i] = 1
+                plan.append((i, slot, DECODE, 1))
+        if not plan:
+            return []
+
+        self._rng, sub = jax.random.split(self._rng)
+        nxt, self.cache, self.router_states, mets = self._serve_step(
+            self.params,
+            self.cache,
+            self.router_states,
+            jnp.asarray(tokens),
+            jnp.asarray(lengths),
+            sub,
+        )
+        nxt = np.asarray(nxt)
+        self.n_steps += 1
+        self.expert_load += np.asarray(mets["moe_load"], np.float64)
+        self.max_vio_per_step.append(float(mets["max_vio"]))
+
+        done: List[Request] = []
+        now = time.perf_counter()
+        for i, slot, kind, n_tok in plan:
+            req = slot.request
+            if kind == PREFILL:
+                slot.n_prefilled += n_tok
+                self.prefill_tokens += n_tok
+                if not slot.prompt_done:
+                    continue  # still mid-prompt: this step's sample is unused
+                req.phase = DECODE
+                req.t_first_token = now
+            else:
+                self.decode_tokens += 1
+            # the step that finishes the prompt doubles as the first decode:
+            # its last-position logits sample the first generated token
+            tok = int(nxt[i])
+            req.output.append(tok)
+            eos = req.eos_id if req.eos_id is not None else self.eos_id
+            if eos is not None and not req.ignore_eos and tok == eos:
+                done.append(self.scheduler.finish(i, "eos", now))
+            elif len(req.output) >= req.max_new_tokens:
+                done.append(self.scheduler.finish(i, "max_new_tokens", now))
+            elif slot.pos >= self.max_seq_len:
+                done.append(self.scheduler.finish(i, "length", now))
+        return done
+
+    # ----------------------------------------------------------------- run
+
+    def run(self, requests: Optional[Iterable[Request]] = None) -> List[Request]:
+        """Drain: submit any extra `requests` (respecting backpressure by
+        interleaving steps), then step until no work remains. Returns all
+        requests completed during this call, in completion order."""
+        finished: List[Request] = []
+        pending = list(requests) if requests is not None else []
+        for req in pending:  # same guard submit() applies
+            assert len(req.prompt) < self.max_seq_len, "prompt does not fit the cache"
+        while pending:
+            req = pending[0]
+            if self.scheduler.submit(req):
+                pending.pop(0)
+            else:
+                finished.extend(self.step())  # make room
+        while self.scheduler.has_work:
+            finished.extend(self.step())
+        return finished
+
+
+# ----------------------------------------------------------- compatibility
 
 
 def greedy_generate(
-    model: Model, params, prompts: jnp.ndarray, n_steps: int, max_seq_len: int = 2048,
+    model: Model,
+    params,
+    prompts: jnp.ndarray,
+    n_steps: int,
+    max_seq_len: int = 2048,
     extra_batch: Optional[Dict[str, jnp.ndarray]] = None,
 ) -> jnp.ndarray:
+    """Batched greedy decoding — thin wrapper over the continuous-batching
+    engine (encdec/vlm requests carry per-request side inputs the slot pool
+    does not model yet, so they fall back to the per-token legacy path)."""
+    cfg = model.cfg
+    if extra_batch or cfg.n_enc_layers or cfg.frontend_dim:
+        return _legacy_generate(model, params, prompts, n_steps, max_seq_len, extra_batch)
+    b, s = prompts.shape
+    eng = ContinuousBatchingEngine(
+        model,
+        params,
+        n_slots=b,
+        chunk_size=min(max(s, 1), 64),
+        # honor the (B, n_steps) shape contract: never evict on 'length'
+        max_seq_len=max(max_seq_len, s + n_steps + 1),
+    )
+    reqs = [
+        eng.submit(np.asarray(prompts[i]), n_steps, ignore_eos=True) for i in range(b)
+    ]
+    assert all(r is not None for r in reqs)
+    eng.run()
+    return jnp.asarray([r.output for r in reqs], jnp.int32)
+
+
+def _legacy_generate(
+    model: Model, params, prompts, n_steps, max_seq_len, extra_batch
+) -> jnp.ndarray:
+    """Seed-style per-token prefill + greedy decode (encdec/vlm only)."""
     batch = {"tokens": prompts}
     if extra_batch:
         batch.update(extra_batch)
-    eng = ServeEngine(model, params, max_seq_len)
-    cache, states = eng.start(batch)
-    logits, cache, states = eng.prefill(prompts, cache, states)
-    toks, _, _ = eng.decode(logits, cache, states, n_steps)
-    return toks
+    cache = model.init_cache(params, batch, max_seq_len)
+    states = model.init_router_states()
+    decode = jax.jit(model.decode_step)
+    logits = None
+    for t in range(prompts.shape[1]):
+        logits, cache, states = decode(params, prompts[:, t : t + 1], cache, states)
+    toks = []
+    for _ in range(n_steps):
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        toks.append(nxt)
+        logits, cache, states = decode(params, nxt, cache, states)
+    return jnp.concatenate(toks, axis=1)

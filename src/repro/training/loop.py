@@ -142,10 +142,14 @@ def train_loop(
 
 
 def evaluate_ppl(model: Model, state: TrainState, batches) -> float:
-    """Test perplexity, routing states frozen (read-only copy per batch)."""
+    """Test perplexity, routing states frozen (read-only copy per batch).
+
+    Per-batch CE means are weighted by each batch's valid-token count, so
+    ragged final batches / masked labels don't skew the corpus perplexity."""
     ces, ns = [], []
     loss_fn = jax.jit(model.loss_fn)
     for batch in batches:
         _, (_, mets) = loss_fn(state.params, batch, state.router_states)
         ces.append(float(mets["ce_loss"]))
-    return float(np.exp(np.mean(ces)))
+        ns.append(int(np.sum(np.asarray(batch["labels"]) >= 0)))
+    return float(np.exp(np.average(ces, weights=ns)))

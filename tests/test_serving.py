@@ -1,0 +1,316 @@
+"""Continuous-batching serving subsystem: chunked-prefill parity against the
+old per-token path, scheduler lifecycle units, and engine end-to-end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, Request, Scheduler, greedy_generate
+from repro.serving.engine import _legacy_generate
+
+
+def _per_token_prefill(model, params, toks, seq_len):
+    """Seed ServeEngine.prefill semantics: one decode_step per position."""
+    st = model.init_router_states()
+    cache = model.init_cache(params, {"tokens": toks[:, :1]}, seq_len)
+    outs = []
+    for t in range(toks.shape[1]):
+        lg, cache, st = model.decode_step(params, toks[:, t : t + 1], cache, st)
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=1), cache, st
+
+
+def _chunked_prefill(model, params, toks, seq_len, chunk):
+    b, s = toks.shape
+    assert s % chunk == 0
+    st = model.init_router_states()
+    cache = model.init_slot_cache(params, b, seq_len)
+    outs = []
+    for t in range(0, s, chunk):
+        lg, cache, st, _ = model.prefill_chunk(
+            params, toks[:, t : t + chunk], cache, st, jnp.full((b,), chunk, jnp.int32)
+        )
+        outs.append(lg)
+    return jnp.concatenate(outs, axis=1), cache, st
+
+
+# ------------------------------------------------------------------ parity
+
+
+@pytest.mark.parametrize(
+    "arch", ["stablelm_1_6b", "gemma2_27b", "mamba2_130m", "zamba2_7b"]
+)
+def test_chunked_prefill_matches_per_token(arch):
+    """Chunked prefill must produce the same logits AND the same cache as
+    the seed's one-token-at-a-time prefill (fp reassociation noise only)."""
+    cfg = configs.reduced_for_smoke(arch, vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, 128, (2, 12)), jnp.int32
+    )
+    ref, ref_cache, _ = _per_token_prefill(model, params, toks, 32)
+    got, got_cache, _ = _chunked_prefill(model, params, toks, 32, chunk=4)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), atol=1e-4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(ref_cache), jax.tree.leaves(got_cache)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-4, rtol=1e-4
+        )
+
+
+def test_chunked_prefill_matches_per_token_moe_stateless():
+    """With a stateless gate (topk) MoE routing is per-token independent, so
+    chunking must not change anything (capacity kept slack)."""
+    cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=128)
+    cfg = dataclasses.replace(
+        cfg, routing=dataclasses.replace(cfg.routing, strategy="topk", capacity_factor=8.0)
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 128, (2, 12)), jnp.int32)
+    ref, _, _ = _per_token_prefill(model, params, toks, 32)
+    got, _, _ = _chunked_prefill(model, params, toks, 32, chunk=4)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got), atol=1e-4, rtol=1e-4)
+
+
+def test_single_chunk_prefill_matches_forward_moe_bip():
+    """One chunk covering the whole prompt routes the exact token set the
+    training forward pass routes -> identical logits and identical BIP dual
+    vector q, even with the stateful gate."""
+    cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    states = model.init_router_states()
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, 128, (2, 8)), jnp.int32)
+    fwd, fwd_states, _, _ = model.forward(params, {"tokens": toks}, states)
+    cache = model.init_slot_cache(params, 2, 32)
+    got, _, got_states, _ = model.prefill_chunk(
+        params, toks, cache, states, jnp.full((2,), 8, jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(fwd), np.asarray(got), atol=1e-4, rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(fwd_states), jax.tree.leaves(got_states)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_prefill_sliding_window_ring_wrap():
+    """Prompts longer than the sliding window: the ring buffer wraps DURING
+    a chunk, so in-chunk writes clobber keys earlier queries still need —
+    the chunk path must attend against the pre-update ring (regression for
+    a write-then-attend bug found in review)."""
+    cfg = configs.reduced_for_smoke("gemma2_27b", vocab_size=128)
+    cfg = dataclasses.replace(cfg, window_size=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    toks = jnp.asarray(np.random.default_rng(7).integers(0, 128, (2, 24)), jnp.int32)
+    ref, _, _ = _per_token_prefill(model, params, toks, 32)
+    for chunk in (4, 8):
+        got, _, _ = _chunked_prefill(model, params, toks, 32, chunk=chunk)
+        np.testing.assert_allclose(
+            np.asarray(ref), np.asarray(got), atol=1e-4, rtol=1e-4,
+            err_msg=f"chunk={chunk}",
+        )
+
+
+def test_ragged_lengths_and_idle_slots_are_isolated():
+    """Rows advancing by different amounts (incl. 0) must match the same
+    rows run in lockstep — padding may never leak across slots."""
+    cfg = configs.reduced_for_smoke("gemma2_27b", vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    st = model.init_router_states()
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, 128, (2, 8)), jnp.int32)
+
+    ref, _, _, _ = model.prefill_chunk(
+        params, toks[:, :4], model.init_slot_cache(params, 2, 32), st,
+        jnp.full((2,), 4, jnp.int32),
+    )
+    cache = model.init_slot_cache(params, 2, 32)
+    t1 = jnp.stack([toks[0, :4], toks[1, :4]])
+    lg1, cache, st1, _ = model.prefill_chunk(
+        params, t1, cache, st, jnp.asarray([2, 4], jnp.int32)
+    )
+    t2 = jnp.stack([toks[0, 2:6], toks[1, 4:8]])
+    lg2, cache, _, _ = model.prefill_chunk(
+        params, t2, cache, st1, jnp.asarray([2, 0], jnp.int32)
+    )
+    # local layers attend [pre-update ring | in-chunk keys]; where the chunk
+    # boundary falls changes the fp summation split, so tight allclose, not
+    # bitwise
+    np.testing.assert_allclose(
+        np.asarray(ref[1]), np.asarray(lg1[1]), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(ref[0, 2:4]), np.asarray(lg2[0, :2]), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_reset_slot_equals_fresh_cache():
+    """A recycled slot must behave exactly like a never-used one."""
+    cfg = configs.reduced_for_smoke("stablelm_1_6b", vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    st = model.init_router_states()
+    toks = jnp.asarray(np.random.default_rng(4).integers(0, 128, (2, 4)), jnp.int32)
+    used = model.init_slot_cache(params, 2, 32)
+    _, used, _, _ = model.prefill_chunk(
+        params, toks, used, st, jnp.full((2,), 4, jnp.int32)
+    )
+    recycled = model.reset_slot(used, jnp.asarray(1))
+    fresh = model.init_slot_cache(params, 2, 32)
+    lg_r, _, _, _ = model.prefill_chunk(
+        params, toks, recycled, st, jnp.asarray([0, 4], jnp.int32)
+    )
+    lg_f, _, _, _ = model.prefill_chunk(
+        params, toks, fresh, st, jnp.asarray([0, 4], jnp.int32)
+    )
+    np.testing.assert_array_equal(np.asarray(lg_r[1]), np.asarray(lg_f[1]))
+
+
+def test_padding_does_not_move_router_state():
+    """Decode-heavy serving chunks are mostly padding; the BIP dual q must
+    be a function of the real rows only. Same real tokens with and without
+    heavy padding -> same q (threshold-statistic resolution); an all-padding
+    step must leave q untouched."""
+    from repro.core import RouterConfig, init_router_state, route
+
+    rng = np.random.default_rng(8)
+    rcfg = RouterConfig(n_experts=8, top_k=2, strategy="bip", bip_iters=4)
+    state = init_router_state(rcfg)
+    real = jnp.asarray(rng.standard_normal((6, 8)), jnp.float32)
+
+    out_ref = route(real, state, rcfg, token_mask=jnp.ones((6,), bool))
+    padded = jnp.concatenate([real, jnp.zeros((42, 8))], axis=0)
+    mask = jnp.arange(48) < 6
+    out_pad = route(padded, state, rcfg, token_mask=mask)
+    np.testing.assert_allclose(
+        np.asarray(out_ref.state["q"]), np.asarray(out_pad.state["q"]), atol=1e-5
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_ref.expert_index), np.asarray(out_pad.expert_index[:6])
+    )
+
+    out_idle = route(padded, out_pad.state, rcfg, token_mask=jnp.zeros((48,), bool))
+    np.testing.assert_array_equal(
+        np.asarray(out_pad.state["q"]), np.asarray(out_idle.state["q"])
+    )
+
+
+# --------------------------------------------------------------- scheduler
+
+
+def _req(plen=4, gen=4, **kw):
+    return Request(prompt=list(range(1, plen + 1)), max_new_tokens=gen, **kw)
+
+
+def test_scheduler_fifo_admission_order():
+    s = Scheduler(n_slots=2)
+    r1, r2, r3 = _req(), _req(), _req()
+    assert s.submit(r1) and s.submit(r2) and s.submit(r3)
+    admitted = s.admit()
+    assert [r.req_id for _, r in admitted] == [r1.req_id, r2.req_id]
+    assert s.n_free_slots == 0 and len(s.waiting) == 1
+    # r3 waits until a slot frees, then takes it FIFO
+    s.finish(admitted[1][0], "eos")
+    (idx, nxt), = s.admit()
+    assert nxt.req_id == r3.req_id and idx == admitted[1][0]
+
+
+def test_scheduler_backpressure():
+    s = Scheduler(n_slots=1, max_waiting=2)
+    assert s.submit(_req()) and s.submit(_req())
+    assert not s.submit(_req()), "queue full must refuse, not drop"
+    s.admit()
+    assert s.submit(_req()), "admission drains the queue and reopens intake"
+
+
+def test_scheduler_slot_reuse_and_lifecycle():
+    s = Scheduler(n_slots=1)
+    a, b = _req(), _req()
+    s.submit(a), s.submit(b)
+    (i1, got), = s.admit()
+    assert got is a and a.phase == "prefill"
+    done = s.finish(i1, "max_new_tokens")
+    assert done is a and a.phase == "done" and a.finish_reason == "max_new_tokens"
+    (i2, got2), = s.admit()
+    assert got2 is b and i2 == i1, "freed slot must be reused"
+    assert s.has_work and s.n_active == 1
+
+
+# ------------------------------------------------------------------ engine
+
+
+def test_engine_eviction_on_eos():
+    """A request hitting EOS frees its slot early; the waiting request is
+    admitted into it and completes."""
+    cfg = configs.reduced_for_smoke("stablelm_1_6b", vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 64, (5,))
+
+    # find the greedy token this prompt emits first, use it as EOS
+    probe = ContinuousBatchingEngine(model, params, n_slots=1, chunk_size=8, max_seq_len=32)
+    r = probe.submit(prompt, 1, ignore_eos=True)
+    probe.run()
+    eos = r.output[0]
+
+    eng = ContinuousBatchingEngine(
+        model, params, n_slots=1, chunk_size=8, max_seq_len=32, eos_id=eos
+    )
+    r1 = eng.submit(prompt, 8)
+    r2 = eng.submit(rng.integers(0, 64, (3,)), 2, ignore_eos=True)
+    eng.run()
+    assert r1.finish_reason == "eos" and r1.output[-1] == eos and len(r1.output) == 1
+    assert r2.finish_reason == "max_new_tokens" and len(r2.output) == 2
+
+
+def test_engine_matches_legacy_generation():
+    """More requests than slots, equal prompts: every completed request must
+    reproduce the legacy per-token greedy continuation exactly (dense arch:
+    rows are independent, so batching cannot change the math)."""
+    cfg = configs.reduced_for_smoke("stablelm_1_6b", vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = jnp.asarray(rng.integers(0, 128, (4, 6)), jnp.int32)
+    ref = np.asarray(_legacy_generate(model, params, prompts, 5, 64, None))
+
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, chunk_size=4, max_seq_len=64)
+    reqs = [eng.submit(np.asarray(prompts[i]), 5, ignore_eos=True) for i in range(4)]
+    eng.run()
+    got = np.asarray([r.output for r in reqs])
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_engine_moe_stream_stays_balanced():
+    """Mixed prefill/decode traffic through the BIP gate: loads accumulate
+    and stay balanced (MaxVio well under collapse)."""
+    cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    eng = ContinuousBatchingEngine(model, params, n_slots=3, chunk_size=8, max_seq_len=64)
+    reqs = [
+        eng.submit(rng.integers(0, 128, (int(rng.integers(3, 20)),)), 6, ignore_eos=True)
+        for _ in range(6)
+    ]
+    done = eng.run()
+    assert len(done) == 6 and all(len(r.output) == 6 for r in reqs)
+    load = eng.expert_load
+    assert load.sum() > 0
+    maxvio = load.max() / max(load.mean(), 1e-9) - 1.0
+    assert maxvio < 1.0, f"expert loads collapsed: {load}"
+
+
+def test_greedy_generate_wrapper_shapes():
+    cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out = greedy_generate(model, params, prompts, n_steps=4, max_seq_len=32)
+    assert out.shape == (2, 4)
+    assert np.all(np.asarray(out) >= 0) and np.all(np.asarray(out) < 64)

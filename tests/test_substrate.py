@@ -7,6 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# where hypothesis is absent, tests/conftest.py installs a deterministic
+# single-sample stub before this import runs
 from hypothesis import given, settings, strategies as st
 
 from repro import configs
