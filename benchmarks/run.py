@@ -10,6 +10,7 @@ Benchmarks:
   router gate overhead ("very small time costs")        -> benchmarks.router_overhead
   step-time model (the >=13% training-time mechanism)   -> benchmarks.steptime_model
   kernel microbench (ADMM iteration + expert GEMM)      -> below
+  dispatch plan old-vs-new + Pallas FFN                 -> benchmarks.moe_dispatch
   roofline table (if dry-run results exist)             -> benchmarks.roofline
 """
 from __future__ import annotations
@@ -76,6 +77,12 @@ def main() -> None:
 
     print("# kernel microbenchmarks", flush=True)
     for r in _kernel_microbench():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
+    print("# MoE dispatch: sort-based ragged plan vs one-hot/cumsum", flush=True)
+    from benchmarks import moe_dispatch
+
+    for r in moe_dispatch.run(smoke=not args.full):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
     print("# router overhead (paper: 'very small time costs')", flush=True)

@@ -17,7 +17,7 @@ from repro.core.ref_bip import (
     kth_largest,
     kth_largest_threshold,
 )
-from repro.core.router import compute_scores, route
+from repro.core.router import DispatchPlan, compute_scores, make_dispatch_plan, route
 from repro.core.types import RouterConfig, RouterOutput, init_router_state
 
 __all__ = [
@@ -32,8 +32,10 @@ __all__ = [
     "bip_route_reference",
     "bip_topk",
     "compute_scores",
+    "DispatchPlan",
     "expert_load",
     "init_router_state",
+    "make_dispatch_plan",
     "kth_largest",
     "kth_largest_threshold",
     "max_violation",

@@ -24,7 +24,8 @@ group's computation stays device-local.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+import dataclasses
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,117 @@ from jax import lax
 from repro.core import ref_bip
 from repro.core.metrics import balance_metrics
 from repro.core.types import RouterConfig, RouterOutput, init_router_state
+
+
+# ------------------------------------------------------- dispatch plan
+#
+# Sort-based ragged dispatch (megablocks-style, Gale et al.): one stable
+# argsort of the (n·k,) expert assignments replaces the (n·k, m) one-hot +
+# serial cumsum bookkeeping, and packing/combining become pure gathers —
+# no m-wide intermediate, no repeat(x, k) materialization, no scatter-add
+# over d-wide activations. Semantics match the historical one-hot plan
+# bit-for-bit: capacity queues are token-ordered (earlier tokens win),
+# slot-major within a token, and token_mask rows never occupy capacity.
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Ragged routing plan consumed within a single trace (not a pytree).
+
+    order    (n·k,) stable argsort of expert assignments (masked → sentinel m)
+    offsets  (m+1,) segment start of each expert's queue in sorted order
+    pos      (n, k) position of each (token, slot) in its expert's queue
+    keep     (n, k) slot survives capacity (and token_mask)
+    """
+
+    expert_index: jnp.ndarray  # (n, k) int32
+    order: jnp.ndarray
+    offsets: jnp.ndarray
+    pos: jnp.ndarray
+    keep: jnp.ndarray
+    capacity: int
+    top_k: int
+
+    @property
+    def counts(self) -> jnp.ndarray:
+        """Per-expert assigned load (m,), pre-capacity, masked rows excluded."""
+        return self.offsets[1:] - self.offsets[:-1]
+
+    def pack(
+        self,
+        x: jnp.ndarray,  # (n, d)
+        *,
+        expert_offset=0,  # first expert owned locally (may be traced)
+        n_local: Optional[int] = None,  # experts packed (static); default all
+    ) -> jnp.ndarray:
+        """Gather tokens into the (n_local, capacity, d) expert buffers."""
+        nk = self.order.shape[0]
+        m_loc = (self.offsets.shape[0] - 1) if n_local is None else n_local
+        cap = self.capacity
+        slots = jnp.arange(m_loc * cap, dtype=jnp.int32)
+        se = expert_offset + slots // cap
+        src_sorted = jnp.take(self.offsets, se) + slots % cap
+        valid = src_sorted < jnp.take(self.offsets, se + 1)
+        src_tok = jnp.take(self.order, jnp.minimum(src_sorted, nk - 1)) // self.top_k
+        buf = jnp.take(x, src_tok, axis=0) * valid[:, None].astype(x.dtype)
+        return buf.reshape(m_loc, cap, x.shape[-1])
+
+    def combine(
+        self,
+        y: jnp.ndarray,  # (n_local, capacity, d) expert outputs
+        weights: jnp.ndarray,  # (n, k) combine weights
+        *,
+        expert_offset=0,
+    ) -> jnp.ndarray:
+        """Gather expert outputs back per (token, slot), weight, and sum."""
+        m_loc, cap, d = y.shape
+        n, k = self.expert_index.shape
+        e_rel = self.expert_index - expert_offset
+        ok = (self.keep & (e_rel >= 0) & (e_rel < m_loc)).reshape(-1)
+        slot = (e_rel * cap + self.pos).reshape(-1)
+        g = jnp.take(y.reshape(m_loc * cap, d), jnp.where(ok, slot, 0), axis=0)
+        w = weights.reshape(-1, 1).astype(y.dtype)
+        contrib = jnp.where(ok[:, None], g * w, 0.0)
+        return contrib.reshape(n, k, d).sum(axis=1)
+
+
+def make_dispatch_plan(
+    expert_index: jnp.ndarray,  # (n, k) int32
+    n_experts: int,
+    capacity: int,
+    token_mask: Optional[jnp.ndarray] = None,  # (n,) bool; False never dispatches
+) -> DispatchPlan:
+    """Build the sort-based plan for one routed batch.
+
+    Masked tokens are re-keyed to the sentinel expert m, so the stable sort
+    pushes them past every real segment: they neither occupy capacity nor
+    displace real tokens, and `counts` covers real traffic only.
+    """
+    n, k = expert_index.shape
+    nk = n * k
+    flat = expert_index.reshape(-1).astype(jnp.int32)
+    if token_mask is not None:
+        flat = jnp.where(jnp.repeat(token_mask, k), flat, n_experts)
+    order = jnp.argsort(flat, stable=True).astype(jnp.int32)
+    sorted_e = jnp.take(flat, order)
+    offsets = jnp.searchsorted(
+        sorted_e, jnp.arange(n_experts + 1, dtype=jnp.int32)
+    ).astype(jnp.int32)
+    # rank within the expert's segment == position in its capacity queue
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - jnp.take(offsets, sorted_e)
+    pos = jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted).reshape(n, k)
+    keep = pos < capacity
+    if token_mask is not None:
+        keep = keep & token_mask[:, None]
+    return DispatchPlan(
+        expert_index=expert_index.astype(jnp.int32),
+        order=order,
+        offsets=offsets,
+        pos=pos,
+        keep=keep,
+        capacity=capacity,
+        top_k=k,
+    )
 
 
 def compute_scores(logits: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
@@ -166,4 +278,12 @@ def route(
     )
 
 
-__all__ = ["route", "compute_scores", "RouterConfig", "RouterOutput", "init_router_state"]
+__all__ = [
+    "DispatchPlan",
+    "compute_scores",
+    "init_router_state",
+    "make_dispatch_plan",
+    "route",
+    "RouterConfig",
+    "RouterOutput",
+]

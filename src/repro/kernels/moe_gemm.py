@@ -20,17 +20,25 @@ compute zeros.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gated_in_kernel(x_ref, wg_ref, wu_ref, h_ref, acc_g, acc_u, *, bd: int, d: int):
+def _interpret_default() -> bool:
+    """Pallas interpret mode unless REPRO_PALLAS_INTERPRET=0 (TPU: Mosaic).
+
+    Every kernel entry point resolves interpret=None through this, so TPU
+    runs lower to hardware without callers threading flags.
+    """
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _gated_in_kernel(x_ref, wg_ref, wu_ref, h_ref, acc_g, acc_u):
     """One (expert, c-block, f-block) tile of h = silu(x wg) * (x wu)."""
 
     @pl.when(pl.program_id(3) == 0)
@@ -57,16 +65,16 @@ def grouped_gated_ffn_in(
     block_c: int = 128,
     block_f: int = 256,
     block_d: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    interpret = _interpret_default() if interpret is None else interpret
     e, c, d = x.shape
     f = w_gate.shape[-1]
     bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
     assert c % bc == 0 and f % bf == 0 and d % bd == 0, (c, f, d, bc, bf, bd)
     grid = (e, c // bc, f // bf, d // bd)
-    kernel = functools.partial(_gated_in_kernel, bd=bd, d=d)
     return pl.pallas_call(
-        kernel,
+        _gated_in_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bc, bd), lambda e_, i, j, k: (e_, i, k)),
@@ -83,7 +91,7 @@ def grouped_gated_ffn_in(
     )(x, w_gate, w_up)
 
 
-def _matmul_kernel(h_ref, w_ref, y_ref, acc, *, nk: int):
+def _matmul_kernel(h_ref, w_ref, y_ref, acc):
     @pl.when(pl.program_id(3) == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
@@ -106,16 +114,16 @@ def grouped_matmul(
     block_c: int = 128,
     block_d: int = 256,
     block_f: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    interpret = _interpret_default() if interpret is None else interpret
     e, c, f = h.shape
     d = w.shape[-1]
     bc, bd, bf = min(block_c, c), min(block_d, d), min(block_f, f)
     assert c % bc == 0 and d % bd == 0 and f % bf == 0
     grid = (e, c // bc, d // bd, f // bf)
-    kernel = functools.partial(_matmul_kernel, nk=f // bf)
     return pl.pallas_call(
-        kernel,
+        _matmul_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bc, bf), lambda e_, i, j, k: (e_, i, k)),
@@ -134,9 +142,14 @@ def expert_ffn(
     w_up: jnp.ndarray,
     w_down: jnp.ndarray,  # (E, F, D)
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     **block_kw,
 ) -> jnp.ndarray:
-    """Full grouped expert FFN: y = (silu(x wg) * (x wu)) wd."""
+    """Full grouped expert FFN: y = (silu(x wg) * (x wu)) wd.
+
+    Raw aligned-shape kernel pair; for the differentiable, auto-padded
+    entry point used by the model path see repro.kernels.ops.expert_ffn.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
     h = grouped_gated_ffn_in(x, w_gate, w_up, interpret=interpret, **block_kw)
     return grouped_matmul(h, w_down, interpret=interpret, **block_kw)

@@ -10,8 +10,7 @@ pallas_call lowers to Mosaic.
 from __future__ import annotations
 
 import functools
-import os
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,10 +19,7 @@ from jax import lax
 from repro.core.ref_bip import expert_kth_index
 from repro.kernels import bip_admm as _bip
 from repro.kernels import moe_gemm as _gemm
-
-
-def _interpret_default() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+from repro.kernels.moe_gemm import _interpret_default
 
 
 @functools.partial(
@@ -39,7 +35,7 @@ def bip_dual_update(
     n_bins: int = 512,
     block_n: int = 1024,
     refine: int = 1,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """T fused ADMM iterations on the (n, m) score matrix. Returns q (m,).
 
@@ -48,6 +44,7 @@ def bip_dual_update(
     resolution is (2/n_bins)^(refine+1)·… ≈ 8e-6 at the defaults — tighter
     than fp32 softmax score gaps (validated in tests/test_kernels.py).
     """
+    interpret = _interpret_default() if interpret is None else interpret
     n, m = s.shape
     rank = expert_kth_index(n, top_k, m)
     if rank < 0:  # capacity slack: constraint never binds
@@ -72,18 +69,111 @@ def bip_dual_update(
     return lax.fori_loop(0, n_iters, body, q_init)
 
 
-def expert_ffn(x, w_gate, w_up, w_down, *, interpret: bool = None, **block_kw):
+# ----------------------------------------------- grouped expert FFN (model path)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest usable block ≤ `want` that divides `dim` (dim is a multiple
+    of 128 after padding; non-dividing requests fall back to one MXU tile)."""
+    if dim % want == 0:
+        return min(want, dim)
+    return min(128, dim)
+
+
+@functools.lru_cache(maxsize=None)
+def _expert_ffn_vjp(bc: int, bf: int, bd: int, interpret: bool):
+    """custom_vjp'd grouped FFN at fixed (aligned) block shapes.
+
+    Forward is the fused Pallas pair (grouped_gated_ffn_in + grouped_matmul).
+    Backward rematerializes the gate/up pre-activations and expresses every
+    dgrad/wgrad as a grouped_matmul over transposed operands, so training
+    never falls back to differentiating through pallas_call.
+    """
+    mm = functools.partial(_gemm.grouped_matmul, interpret=interpret)
+
+    @jax.custom_vjp
+    def f(x, wg, wu, wd):
+        h = _gemm.grouped_gated_ffn_in(
+            x, wg, wu, block_c=bc, block_f=bf, block_d=bd, interpret=interpret
+        )
+        return mm(h, wd, block_c=bc, block_d=bd, block_f=bf)
+
+    def fwd(x, wg, wu, wd):
+        return f(x, wg, wu, wd), (x, wg, wu, wd)
+
+    def bwd(res, dy):
+        x, wg, wu, wd = res
+        t = lambda a: jnp.swapaxes(a, -1, -2)
+        # rematerialize pre-activations: residuals are just the inputs
+        g = mm(x, wg, block_c=bc, block_f=bd, block_d=bf)
+        u = mm(x, wu, block_c=bc, block_f=bd, block_d=bf)
+        gf = g.astype(jnp.float32)
+        uf = u.astype(jnp.float32)
+        sg = jax.nn.sigmoid(gf)
+        silu = gf * sg
+        h = (silu * uf).astype(x.dtype)
+        # dgrad/wgrad of the down projection
+        dh = mm(dy, t(wd), block_c=bc, block_f=bd, block_d=bf)
+        dwd = mm(t(h), dy, block_c=bf, block_f=bc, block_d=bd)
+        dhf = dh.astype(jnp.float32)
+        dg = (dhf * uf * (sg * (1.0 + gf * (1.0 - sg)))).astype(x.dtype)
+        du = (dhf * silu).astype(x.dtype)
+        # dgrad/wgrad of the fused gate/up projections
+        dx = mm(dg, t(wg), block_c=bc, block_f=bf, block_d=bd) + mm(
+            du, t(wu), block_c=bc, block_f=bf, block_d=bd
+        )
+        dwg = mm(t(x), dg, block_c=bd, block_f=bc, block_d=bf)
+        dwu = mm(t(x), du, block_c=bd, block_f=bc, block_d=bf)
+        return dx, dwg, dwu, dwd
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def expert_ffn(
+    x: jnp.ndarray,       # (E, C, D)
+    w_gate: jnp.ndarray,  # (E, D, F)
+    w_up: jnp.ndarray,    # (E, D, F)
+    w_down: jnp.ndarray,  # (E, F, D)
+    *,
+    interpret: Optional[bool] = None,
+    block_c: int = 128,
+    block_f: int = 256,
+    block_d: int = 256,
+) -> jnp.ndarray:
+    """Differentiable grouped expert FFN with automatic MXU alignment.
+
+    Pads capacity/d/f up to multiples of 128 (zero rows/columns are exact:
+    they contribute nothing through the GEMMs and the SwiGLU of zeros is
+    zero), runs the Pallas kernel pair under a custom_vjp whose backward is
+    itself grouped GEMMs, and slices the padding back off. This is the
+    entry point the model path (models/moe._expert_ffn) uses when
+    cfg.routing.use_kernel is set.
+    """
     interpret = _interpret_default() if interpret is None else interpret
-    return _gemm.expert_ffn(
-        x, w_gate, w_up, w_down, interpret=interpret, **block_kw
+    e, c, d = x.shape
+    f = w_gate.shape[-1]
+    cp, dp, fp = _round_up(c, 128), _round_up(d, 128), _round_up(f, 128)
+    bc = _pick_block(cp, block_c)
+    bd = _pick_block(dp, block_d)
+    bf = _pick_block(fp, block_f)
+
+    def pad(a, rows, cols):
+        return jnp.pad(a, ((0, 0), (0, rows - a.shape[1]), (0, cols - a.shape[2])))
+
+    y = _expert_ffn_vjp(bc, bf, bd, bool(interpret))(
+        pad(x, cp, dp), pad(w_gate, dp, fp), pad(w_up, dp, fp), pad(w_down, fp, dp)
     )
+    return y[:, :c, :d]
 
 
-def grouped_matmul(h, w, *, interpret: bool = None, **block_kw):
-    interpret = _interpret_default() if interpret is None else interpret
+def grouped_matmul(h, w, *, interpret: Optional[bool] = None, **block_kw):
     return _gemm.grouped_matmul(h, w, interpret=interpret, **block_kw)
 
 
-def grouped_gated_ffn_in(x, wg, wu, *, interpret: bool = None, **block_kw):
-    interpret = _interpret_default() if interpret is None else interpret
+def grouped_gated_ffn_in(x, wg, wu, *, interpret: Optional[bool] = None, **block_kw):
     return _gemm.grouped_gated_ffn_in(x, wg, wu, interpret=interpret, **block_kw)

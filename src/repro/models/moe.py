@@ -34,10 +34,22 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import metrics as core_metrics
-from repro.core import route
+from repro.core import make_dispatch_plan, route
 from repro.core.types import RouterConfig
 
 Params = Dict[str, jnp.ndarray]
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """jax.shard_map when available, else the jax.experimental spelling
+    (pre-0.5 jax exposes it only there, with check_vma named check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma)
 
 
 def router_config(cfg: ModelConfig, data_axes: Tuple[str, ...] = ()) -> RouterConfig:
@@ -134,6 +146,12 @@ def moe_ffn(params, x, router_state, cfg, mesh_ctx, token_mask=None):
 
 
 # -------------------------------------------------- dispatch bookkeeping
+#
+# The hot path builds a sort-based ragged plan (core.router.make_dispatch_plan):
+# argsort + segment offsets, pack/combine as pure gathers. `_dispatch_plan`
+# below is the historical one-hot/cumsum formulation, kept as the semantic
+# oracle for the parity suite (tests/test_moe_dispatch.py), the property
+# tests, and benchmarks/moe_dispatch.py's old-vs-new comparison.
 
 
 def _dispatch_plan(
@@ -171,8 +189,17 @@ def _expert_ffn(
     xb: jnp.ndarray,  # (e, c, d)
     cfg: ModelConfig,
 ) -> jnp.ndarray:
-    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
     dt = cfg.compute_dtype
+    if cfg.routing.use_kernel and cfg.act == "silu":
+        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
+
+        return kernel_ops.expert_ffn(
+            xb.astype(dt),
+            w_gate.astype(dt),
+            w_up.astype(dt),
+            w_down.astype(dt),
+        )
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
     g = jnp.einsum("ecd,edf->ecf", xb, w_gate.astype(dt))
     u = jnp.einsum("ecd,edf->ecf", xb, w_up.astype(dt))
     return jnp.einsum("ecf,efd->ecd", act(g) * u, w_down.astype(dt))
@@ -196,31 +223,18 @@ def moe_ffn_local(
 
     logits = jnp.einsum("nd,dm->nm", x.astype(jnp.float32), params["w_router"])
     out = route(logits, router_state, rcfg, token_mask=token_mask)
-    pos, keep = _dispatch_plan(out.expert_index, m, cap, token_mask)
+    plan = make_dispatch_plan(out.expert_index, m, cap, token_mask)
 
-    # scatter tokens into (m, cap, d)
-    e_flat = out.expert_index.reshape(-1)
-    pos_flat = pos.reshape(-1)
-    keep_flat = keep.reshape(-1)
-    src = jnp.repeat(x, cfg.routing.top_k, axis=0) * keep_flat[:, None]
-    buf = jnp.zeros((m, cap, d), x.dtype)
-    buf = buf.at[e_flat, jnp.where(keep_flat, pos_flat, 0)].add(
-        jnp.where(keep_flat[:, None], src, 0.0)
-    )
-
+    buf = plan.pack(x)  # (m, cap, d) by gather — no one-hot, no scatter
     y = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], buf, cfg)
+    y_tok = plan.combine(y, out.combine_weights)
 
-    # combine: gather back and weight
-    gathered = y[e_flat, jnp.where(keep_flat, pos_flat, 0)]  # (n*k, d)
-    w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
-    contrib = jnp.where(keep_flat[:, None], gathered * w_flat, 0.0)
-    y_tok = contrib.reshape(n, cfg.routing.top_k, d).sum(axis=1)
     mets = out.metrics
     if token_mask is not None:
         # balance metrics over the real tokens only (padding routes as
-        # uniform filler and would flatten the reported load)
-        onehot = jax.nn.one_hot(out.expert_index, m, dtype=jnp.float32)
-        load = jnp.sum(onehot * token_mask[:, None, None], axis=(0, 1))
+        # uniform filler and would flatten the reported load); the plan's
+        # segment counts already exclude masked rows
+        load = plan.counts.astype(jnp.float32)
         mean_load = jnp.maximum(
             jnp.sum(token_mask) * cfg.routing.top_k / m, 1e-9
         )
@@ -285,30 +299,16 @@ def moe_ffn_ep2d(
             x_all = x_loc  # already replicated
         logits = jnp.einsum("nd,dm->nm", x_all.astype(jnp.float32), w_router)
         out = route(logits, q_state, rcfg)
-        pos, keep = _dispatch_plan(out.expert_index, m, cap)
+        plan = make_dispatch_plan(out.expert_index, m, cap)
 
-        e_glob = out.expert_index
-        mine = (e_glob >= rank * m_loc) & (e_glob < (rank + 1) * m_loc) & keep
-        e_loc = jnp.clip(e_glob - rank * m_loc, 0, m_loc - 1)
-        e_flat = e_loc.reshape(-1)
-        pos_flat = pos.reshape(-1)
-        mine_flat = mine.reshape(-1)
-        src = jnp.repeat(x_all, k, axis=0)
-        buf = jnp.zeros((m_loc, cap, d), x_all.dtype)
-        buf = buf.at[
-            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
-        ].add(jnp.where(mine_flat[:, None], src, 0.0))
+        # gather THIS rank's expert segments straight out of the sort order
+        buf = plan.pack(x_all, expert_offset=rank * m_loc, n_local=m_loc)
 
         # expert FFN on the local (m_loc, f_loc) weight shard; y is partial
         # over f, completed by the psum below
         y = _expert_ffn(w_gate, w_up, w_down, buf, cfg)
 
-        gathered = y[
-            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
-        ]
-        w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
-        contrib = jnp.where(mine_flat[:, None], gathered * w_flat, 0.0)
-        y_tok = contrib.reshape(n_global, k, d).sum(axis=1)
+        y_tok = plan.combine(y, out.combine_weights, expert_offset=rank * m_loc)
         y_tok = lax.psum(y_tok, model_axis)
         if token_sharded:
             if f_shards > 1:
@@ -340,7 +340,7 @@ def moe_ffn_ep2d(
         }
         return y_tok, {"q": new_q}, aux, mets
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         block,
         mesh=mesh,
         in_specs=(
@@ -424,19 +424,9 @@ def moe_ffn_ep2ds(
         rank = lax.axis_index(model_axis)
         logits = jnp.einsum("nd,dm->nm", x_loc.astype(jnp.float32), w_router)
         out = route(logits, q_state, rcfg)
-        pos, keep = _dispatch_plan(out.expert_index, m, cap)
+        plan = make_dispatch_plan(out.expert_index, m, cap)
 
-        e_glob = out.expert_index
-        mine = (e_glob >= rank * m_loc) & (e_glob < (rank + 1) * m_loc) & keep
-        e_loc = jnp.clip(e_glob - rank * m_loc, 0, m_loc - 1)
-        e_flat = e_loc.reshape(-1)
-        pos_flat = pos.reshape(-1)
-        mine_flat = mine.reshape(-1)
-        src = jnp.repeat(x_loc, k, axis=0)
-        buf = jnp.zeros((m_loc, cap, d), x_loc.dtype)
-        buf = buf.at[
-            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
-        ].add(jnp.where(mine_flat[:, None], src, 0.0))
+        buf = plan.pack(x_loc, expert_offset=rank * m_loc, n_local=m_loc)
 
         # selective gather: only dispatched tokens cross the data axis
         buf_all = lax.all_gather(buf, data_axes, axis=1, tiled=True)
@@ -455,12 +445,7 @@ def moe_ffn_ep2ds(
             y = lax.dynamic_slice_in_dim(y, idx * cap, cap, axis=1)
         # (m_loc, cap, d), complete values for THIS rank's dispatched tokens
 
-        gathered = y[
-            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
-        ]
-        w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
-        contrib = jnp.where(mine_flat[:, None], gathered * w_flat, 0.0)
-        y_tok = contrib.reshape(n_loc, k, d).sum(axis=1)
+        y_tok = plan.combine(y, out.combine_weights, expert_offset=rank * m_loc)
         y_tok = lax.psum(y_tok, model_axis)
 
         new_q = lax.pmean(out.state["q"], data_axes)
@@ -476,7 +461,7 @@ def moe_ffn_ep2ds(
         aux = lax.pmean(out.aux_loss, data_axes)
         return y_tok, {"q": new_q}, aux, mets
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         block,
         mesh=mesh,
         in_specs=(
@@ -537,30 +522,14 @@ def moe_ffn_ep(
         rank = lax.axis_index(model_axis)
         logits = jnp.einsum("nd,dm->nm", x_loc.astype(jnp.float32), w_router)
         out = route(logits, q_state, rcfg)
-        pos, keep = _dispatch_plan(out.expert_index, m, cap)
+        plan = make_dispatch_plan(out.expert_index, m, cap)
 
-        # keep only slots routed to THIS rank's experts
-        e_glob = out.expert_index  # (n_loc, k)
-        mine = (e_glob >= rank * m_loc) & (e_glob < (rank + 1) * m_loc) & keep
-        e_loc = jnp.clip(e_glob - rank * m_loc, 0, m_loc - 1)
-
-        e_flat = e_loc.reshape(-1)
-        pos_flat = pos.reshape(-1)
-        mine_flat = mine.reshape(-1)
-        src = jnp.repeat(x_loc, k, axis=0)
-        buf = jnp.zeros((m_loc, cap, d), x_loc.dtype)
-        buf = buf.at[
-            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
-        ].add(jnp.where(mine_flat[:, None], src, 0.0))
+        # pack only the slots routed to THIS rank's experts (pure gather)
+        buf = plan.pack(x_loc, expert_offset=rank * m_loc, n_local=m_loc)
 
         y = _expert_ffn(w_gate, w_up, w_down, buf, cfg)
 
-        gathered = y[
-            jnp.where(mine_flat, e_flat, 0), jnp.where(mine_flat, pos_flat, 0)
-        ]
-        w_flat = out.combine_weights.reshape(-1, 1).astype(y.dtype)
-        contrib = jnp.where(mine_flat[:, None], gathered * w_flat, 0.0)
-        y_tok = contrib.reshape(n_loc, k, d).sum(axis=1)
+        y_tok = plan.combine(y, out.combine_weights, expert_offset=rank * m_loc)
         # combine across expert-owners (rides the TP all-reduce)
         y_tok = lax.psum(y_tok, model_axis)
 
@@ -582,7 +551,7 @@ def moe_ffn_ep(
         }
         return y_tok, {"q": new_q}, aux, mets
 
-    f = jax.shard_map(
+    f = _shard_map(
         block,
         mesh=mesh,
         in_specs=(

@@ -12,6 +12,7 @@ traffic — the paper's systems payoff at inference time.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
@@ -37,9 +38,26 @@ class ContinuousBatchingEngine:
         eos_id: Optional[int] = None,
         temperature: float = 0.0,
         max_waiting: int = 256,
+        use_kernel: Optional[bool] = None,
         seed: int = 0,
     ):
         cfg = model.cfg
+        if (
+            use_kernel is not None
+            and cfg.is_moe
+            and use_kernel != cfg.routing.use_kernel
+        ):
+            # serving-side override: flip the Pallas kernels (grouped expert
+            # FFN + ADMM dual update) on/off without editing the config file.
+            # Same parameter shapes, so the caller's params stay valid — the
+            # serve path dispatches via moe._expert_ffn on the same masked
+            # sort-based dispatch plan either way.
+            from repro.models import build_model
+
+            cfg = dataclasses.replace(
+                cfg, routing=dataclasses.replace(cfg.routing, use_kernel=use_kernel)
+            )
+            model = build_model(cfg)
         assert not cfg.n_enc_layers and not cfg.frontend_dim, (
             "continuous batching serves token-only families; use "
             "greedy_generate's legacy path for encdec/vlm"
