@@ -106,6 +106,13 @@ def main() -> None:
                     flush=True,
                 )
 
+    if not args.skip_train:
+        print("# per-step balance-method sweep (paper's step-wise MaxVio lens)", flush=True)
+        from benchmarks import balance_sweep
+
+        for r in balance_sweep.run(smoke=not args.full):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
     print("# step-time model (>=13% saving mechanism)", flush=True)
     from benchmarks import steptime_model
 

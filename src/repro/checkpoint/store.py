@@ -164,6 +164,36 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         return step, load_pytree(os.path.join(self.dir, f"step_{step}.npz"))
 
+    # ------------------------------------------------- full training state
+
+    def save_train_state(self, state) -> str:
+        """Persist a full TrainState — params, Adam moments + step counter,
+        and the router states (the BIP dual q / Loss-Free bias) — under the
+        step index recorded in the optimizer, so a restored run continues
+        bit-exactly where this one stopped."""
+        step = int(jax.device_get(state.opt_state["step"]))
+        return self.save(
+            step,
+            {
+                "params": state.params,
+                "opt_state": state.opt_state,
+                "router_states": state.router_states,
+            },
+        )
+
+    def restore_train_state(self, step: Optional[int] = None) -> Tuple[int, Any]:
+        """Inverse of save_train_state. Returns (step, TrainState) with every
+        leaf at its checkpointed dtype (bf16 moments survive the npz
+        roundtrip via the uint16 view)."""
+        from repro.training.loop import TrainState  # avoid import cycle
+
+        step, tree = self.restore(step)
+        return step, TrainState(
+            params=tree["params"],
+            opt_state=tree["opt_state"],
+            router_states=tree["router_states"],
+        )
+
     def _gc(self):
         steps = sorted(
             int(m.group(1))

@@ -29,7 +29,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -41,13 +40,12 @@ from repro.distributed import (
     make_mesh_ctx,
     param_specs,
     router_state_specs,
-    train_state_specs,
 )
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.optim import adamw as _adamw
 from repro.optim.schedules import constant
-from repro.training.loop import TrainState, init_train_state, make_train_step
+from repro.training.loop import compile_train_step, init_train_state
 
 # -------------------------------------------------------- applicability
 
@@ -69,57 +67,6 @@ def valid_pairs():
 
 
 # ------------------------------------------------------------- programs
-
-
-def _grad_accum_train_step(model, cfg, opt_cfg, microbatches: int):
-    """Train step with sequential microbatch gradient accumulation."""
-
-    base = make_train_step(model, opt_cfg, constant(3e-4))
-    if microbatches <= 1:
-        return base
-
-    def step(state: TrainState, batch):
-        def micro(b):
-            return jax.tree.map(
-                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
-                b,
-            )
-
-        mb = micro(batch)
-
-        # accumulate in the parameter dtype: fp32 accumulation doubles the
-        # carry footprint for bf16-param models (arctic) with negligible
-        # benefit at <=16 microbatches
-        acc_dt = cfg.param_dtype
-
-        def body(carry, one):
-            grads_acc, router = carry
-            (loss, (router, mets)), grads = jax.value_and_grad(
-                model.loss_fn, has_aux=True
-            )(state.params, one, router)
-            grads_acc = jax.tree.map(
-                lambda a, g: (a + g.astype(acc_dt)), grads_acc, grads
-            )
-            return (grads_acc, router), (loss, mets)
-
-        zero = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, acc_dt), state.params
-        )
-        (grads, router), (losses, mets) = jax.lax.scan(
-            body, (zero, state.router_states), mb
-        )
-        grads = jax.tree.map(lambda g: g / microbatches, grads)
-        lr = constant(3e-4)(state.opt_state["step"].astype(jnp.float32))
-        new_params, new_opt, info = _adamw.adamw_update(
-            grads, state.opt_state, state.params, lr, opt_cfg
-        )
-        out_mets = {"loss": losses.mean(), **info}
-        return (
-            TrainState(params=new_params, opt_state=new_opt, router_states=router),
-            out_mets,
-        )
-
-    return step
 
 
 def _sds(tree):
@@ -184,21 +131,11 @@ def lower_one(
             state_sds = jax.eval_shape(
                 lambda: init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
             )
-            st_specs = train_state_specs(state_sds, cfg, mesh)
-            b_specs = batch_specs(cfg, mesh, shape.global_batch)
-            b_specs = {k: b_specs[k] for k in specs_in}
-            step = _grad_accum_train_step(model, cfg, opt_cfg, microbatches)
-            fn = jax.jit(
-                step,
-                in_shardings=(
-                    jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs),
-                    {k: NamedSharding(mesh, v) for k, v in b_specs.items()},
-                ),
-                out_shardings=(
-                    jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs),
-                    None,
-                ),
-                donate_argnums=(0,),
+            # the production harness step: one implementation, dry-run and
+            # real training compile the same sharded/donated program
+            fn = compile_train_step(
+                model, opt_cfg, constant(3e-4), state_sds, specs_in,
+                mesh=mesh, microbatches=microbatches,
             )
             lowered = fn.lower(state_sds, specs_in)
         elif shape.kind == "prefill":
@@ -273,14 +210,16 @@ def lower_one(
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    xla_cost = compiled.cost_analysis()
     # Loop-aware per-device costs (XLA's cost_analysis counts while bodies
     # once — see repro.launch.hlo_cost).
     from repro.launch.hlo_cost import (
         analyze_compiled,
         cpu_bf16_upcast_bytes,
         cpu_bf16_upcast_carried_bytes,
+        xla_cost_analysis,
     )
+
+    xla_cost = xla_cost_analysis(compiled)
 
     t0 = time.time()
     hlo_txt = compiled.as_text()

@@ -125,10 +125,9 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     cm = _CONTRACT_RE.search(op.line)
     k = 1
     if cm is not None:
-        # first operand name
-        om = re.search(r"\b" + re.escape(op.opcode) + r"\(%?([\w.\-]+)", op.line)
-        if om:
-            lhs_type = comp.symbols.get(om.group(1), "")
+        operands = _operand_names(op)
+        if operands:
+            lhs_type = comp.symbols.get(operands[0], "")
             lhs_dims = _first_shape_dims(lhs_type)
             for idx in cm.group(1).split(","):
                 if idx and int(idx) < len(lhs_dims):
@@ -136,26 +135,34 @@ def _dot_flops(op: Op, comp: Computation) -> float:
     return 2.0 * out_elems * k
 
 
-def _operand_names(op: Op) -> List[str]:
-    m = re.search(re.escape(op.opcode) + r"\((.*)", op.line)
+def _operand_region(op: Op) -> str:
+    """The text inside the op's balanced operand parens. Operand types may
+    themselves contain parens (tuple types), so track depth."""
+    m = re.search(re.escape(op.opcode) + r"\(", op.line)
     if not m:
-        return []
-    depth, buf, names = 0, "", []
-    for ch in m.group(1):
+        return ""
+    start, depth = m.end(), 1
+    for i in range(start, len(op.line)):
+        ch = op.line[i]
         if ch == "(":
             depth += 1
         elif ch == ")":
-            if depth == 0:
-                break
             depth -= 1
-        if ch == "," and depth == 0:
-            names.append(buf.strip())
-            buf = ""
-        else:
-            buf += ch
-    if buf.strip():
-        names.append(buf.strip())
-    return [n.lstrip("%") for n in names if n.strip().startswith("%")]
+            if depth == 0:
+                return op.line[start:i]
+    return op.line[start:]
+
+
+def _operand_names(op: Op) -> List[str]:
+    """Operand value names. Handles both HLO spellings: bare `%name` and the
+    typed `f32[512,512]{1,0} %name` of newer XLA — each operand carries
+    exactly one %-sigiled identifier either way."""
+    region = _operand_region(op)
+    names = re.findall(r"%([\w.\-]+)", region)
+    if names or not region:
+        return names
+    # sigil-less dumps: bare comma-separated names (no type annotations)
+    return [t.strip() for t in region.split(",") if t.strip() and "[" not in t]
 
 
 _TRAFFIC_OPS = {
@@ -280,6 +287,21 @@ def analyze(txt: str) -> Cost:
 
 def analyze_compiled(compiled) -> Cost:
     return analyze(compiled.as_text())
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """compiled.cost_analysis() normalized to a flat dict.
+
+    jax returned a one-element list of property dicts through 0.4.x and a
+    plain dict from 0.5; accept both so the dry-run and tests run on either.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        out: Dict[str, float] = {}
+        for entry in cost:
+            out.update(entry)
+        return out
+    return dict(cost)
 
 
 def cpu_bf16_upcast_bytes(txt: str, min_bytes: int = 1 << 25) -> float:

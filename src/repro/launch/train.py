@@ -2,15 +2,17 @@
 
 Local (CPU / small mesh):
     PYTHONPATH=src python -m repro.launch.train --arch minimind-moe-16e \
-        --steps 200 --batch 8 --seq-len 128 [--method bip|lossfree|aux_loss]
+        --steps 200 --batch 8 --seq-len 128 [--method bip|lossfree|aux_loss] \
+        [--mesh 4x2] [--micro 2] [--ckpt-dir ck --ckpt-every 50 --resume]
 
 Production (TPU pod; one process per host, standard jax.distributed):
     python -m repro.launch.train --arch llama4-scout-17b-a16e --production \
         --coordinator $COORD --num-hosts $N --host-id $ID
 
-The production path builds the 16x16 (or 2x16x16 with --multi-pod) mesh and
-the same sharded train step the dry-run compiles; on this CPU container it
-is exercised via repro.launch.dryrun instead.
+Both mesh paths (--production's 16x16 / 2x16x16 pod mesh and --mesh's DxM
+host mesh over local devices) feed the SAME sharded train step: explicit
+in/out shardings from repro.distributed.sharding, donated TrainState,
+microbatch gradient accumulation (see repro.training.loop).
 """
 from __future__ import annotations
 
@@ -29,17 +31,31 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--micro", type=int, default=1,
+                    help="microbatches per step (gradient accumulation)")
     ap.add_argument("--reduced", action="store_true",
                     help="train the reduced (smoke-scale) variant of --arch")
+    ap.add_argument("--bf16", action="store_true",
+                    help="bf16 compute (master params/moments stay fp32)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save the full TrainState every N steps (0 = only final)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint in --ckpt-dir and continue")
     ap.add_argument("--log-every", type=int, default=10)
-    # production flags
+    ap.add_argument("--out-json", default=None,
+                    help="write the run summary to this JSON file")
+    # mesh flags
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="host mesh over local devices, e.g. 4x2 = 4-way data x 2-way model")
     ap.add_argument("--production", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--coordinator", default=None)
     ap.add_argument("--num-hosts", type=int, default=1)
     ap.add_argument("--host-id", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     if args.production and args.coordinator:
         import jax
@@ -64,35 +80,64 @@ def main(argv=None):
             bip_iters=args.bip_iters or cfg.routing.bip_iters,
         )
         cfg = dataclasses.replace(cfg, routing=routing)
+    if args.bf16:
+        import jax.numpy as jnp
 
-    mesh_ctx = None
+        cfg = dataclasses.replace(cfg, compute_dtype=jnp.bfloat16)
+
+    mesh = None
     if args.production:
         from repro.distributed import make_mesh_ctx
         from repro.launch.mesh import make_production_mesh
 
         mesh = make_production_mesh(multi_pod=args.multi_pod)
-        mesh_ctx = make_mesh_ctx(mesh)
-        model = build_model(cfg, mesh_ctx)
+        model = build_model(cfg, make_mesh_ctx(mesh))
+    elif args.mesh:
+        from repro.distributed import make_mesh_ctx
+        from repro.launch.mesh import make_host_mesh
+
+        data, model_par = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_host_mesh(data, model_par)
+        model = build_model(cfg, make_mesh_ctx(mesh))
     else:
         model = build_model(cfg)
 
-    print(f"training {cfg.name} [{cfg.family}] method={cfg.routing.strategy if cfg.is_moe else 'n/a'}")
+    print(
+        f"training {cfg.name} [{cfg.family}]"
+        f" method={cfg.routing.strategy if cfg.is_moe else 'n/a'}"
+        f" mesh={dict(mesh.shape) if mesh is not None else None}"
+        f" micro={args.micro}"
+    )
     batches = make_batches(cfg, args.batch, args.seq_len, args.steps)
     state, log = train_loop(
-        model, batches, lr=args.lr, total_steps=args.steps, log_every=args.log_every
+        model,
+        batches,
+        lr=args.lr,
+        total_steps=args.steps,
+        log_every=args.log_every,
+        mesh=mesh,
+        microbatches=args.micro,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every or (args.steps if args.ckpt_dir else 0),
+        resume=args.resume,
     )
     test = make_batches(cfg, args.batch, args.seq_len, 4, split="test")
     ppl = evaluate_ppl(model, state, test)
-    summary = {**log.summary(), "test_ppl": ppl}
+    summary = {
+        "arch": cfg.name,
+        "method": cfg.routing.strategy if cfg.is_moe else None,
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+        "microbatches": args.micro,
+        **log.summary(),
+        "test_ppl": ppl,
+    }
     print(json.dumps(summary, indent=1, default=float))
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump(summary, f, indent=1, default=float)
 
     if args.ckpt_dir:
-        from repro.checkpoint import CheckpointManager
-
-        CheckpointManager(args.ckpt_dir).save(
-            args.steps, {"params": state.params, "router": state.router_states}
-        )
-        print(f"checkpoint -> {args.ckpt_dir}/step_{args.steps}.npz")
+        print(f"checkpoint -> {args.ckpt_dir}")
     return 0
 
 

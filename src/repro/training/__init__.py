@@ -1,4 +1,16 @@
-"""repro.training — TrainState and the training loop."""
-from repro.training.loop import TrainState, make_train_step, train_loop
+"""repro.training — TrainState and the training harness."""
+from repro.training.loop import (
+    TrainState,
+    compile_train_step,
+    init_train_state,
+    make_train_step,
+    train_loop,
+)
 
-__all__ = ["TrainState", "make_train_step", "train_loop"]
+__all__ = [
+    "TrainState",
+    "compile_train_step",
+    "init_train_state",
+    "make_train_step",
+    "train_loop",
+]

@@ -1,13 +1,41 @@
-"""Training loop: TrainState, jit'd train_step factory, host-side driver.
+"""Training harness: TrainState, sharded/donated/microbatched train step,
+checkpointed host-side driver.
 
 The train step threads three pytrees: params, optimizer state, and the
 per-MoE-layer router states (the BIP dual vector q / Loss-Free bias). The
 host loop accumulates the paper's balance measurements (per-batch MaxVio per
 layer -> AvgMaxVio / SupMaxVio) via BalanceTracker — exactly the quantities
 in the paper's Tables 2-5.
+
+Production shape (DESIGN.md §Training):
+
+* **Sharding** — `compile_train_step(..., mesh=...)` resolves explicit
+  `in_shardings`/`out_shardings` for every TrainState leaf and batch tensor
+  from `repro.distributed.sharding` (FSDP params over the data axes, tensor/
+  expert parallelism over 'model', replicated router duals) so GSPMD never
+  has to guess a layout for the optimizer update.
+* **Donation** — the TrainState argument is donated (`donate_argnums=(0,)`):
+  params/mu/nu buffers are updated in place, so a step's live memory is one
+  copy of the state plus transients, not two.
+* **Mixed precision** — master params and Adam moments stay fp32 (or the
+  per-config `adam_*_dtype` policy); the forward/backward computes in
+  `cfg.compute_dtype` (bf16 for the full-size configs) because every weight
+  is cast at its use site inside the model. Gradients therefore come back in
+  the fp32 master dtype and the update math runs in fp32 (`optim.adamw`).
+* **Gradient accumulation** — `microbatches=k` reshapes the global batch to
+  (k, B/k, ...) and runs a `lax.scan` of forward/backward per microbatch,
+  accumulating gradients in the parameter dtype; router states thread
+  *sequentially* through microbatches (the BIP dual price q updates between
+  microbatches, exactly as it would across smaller true steps).
+* **Checkpointing** — `train_loop(ckpt_dir=..., ckpt_every=N, resume=True)`
+  saves the full TrainState (params, Adam moments, step counter, router
+  states q) through `checkpoint.store` and resumes bit-exactly: the data
+  stream is deterministic per step index, so a restored run replays the
+  remaining schedule on identical batches.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
@@ -38,29 +66,143 @@ def init_train_state(model: Model, key, opt_cfg: _adamw.AdamWConfig) -> TrainSta
     )
 
 
+def _split_micro(batch: Dict[str, jnp.ndarray], k: int) -> Dict[str, jnp.ndarray]:
+    return jax.tree.map(
+        lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch
+    )
+
+
+def _reduce_micro_mets(mets: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Collapse (k, ...)-stacked per-microbatch metrics to per-step values.
+
+    MaxVio is reduced with max (the conservative per-step number: the worst
+    microbatch — matches SupMaxVio semantics); scalars average; perplexity is
+    recomputed from the averaged CE so it stays exp(mean nll)."""
+    out = {}
+    for name, v in mets.items():
+        if name == "max_vio_per_layer":
+            out[name] = jnp.max(v, axis=0)
+        elif name != "perplexity":
+            out[name] = jnp.mean(v, axis=0)
+    if "ce_loss" in out:
+        out["perplexity"] = jnp.exp(out["ce_loss"])
+    return out
+
+
 def make_train_step(
     model: Model,
     opt_cfg: _adamw.AdamWConfig,
     lr_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    *,
+    microbatches: int = 1,
 ):
-    """Returns train_step(state, batch) -> (state, metrics). Pure; jit-ready."""
+    """Returns train_step(state, batch) -> (state, metrics). Pure; jit-ready.
 
-    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
-        (loss, (new_router, mets)), grads = jax.value_and_grad(
-            model.loss_fn, has_aux=True
-        )(state.params, batch, state.router_states)
+    With microbatches=k the batch's leading axis must divide by k; the
+    forward/backward runs as a k-trip lax.scan with gradient accumulation so
+    the residual/activation footprint is that of B/k sequences.
+    """
+
+    def _fwd_bwd(params, batch, router):
+        return jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch, router
+        )
+
+    def _apply(state: TrainState, grads, new_router, mets):
         lr = lr_fn(state.opt_state["step"].astype(jnp.float32))
         new_params, new_opt, info = _adamw.adamw_update(
             grads, state.opt_state, state.params, lr, opt_cfg
         )
         mets = dict(mets)
-        mets.update(loss=loss, **info)
+        mets.update(info)
         return (
             TrainState(params=new_params, opt_state=new_opt, router_states=new_router),
             mets,
         )
 
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if microbatches <= 1:
+            (loss, (new_router, mets)), grads = _fwd_bwd(
+                state.params, batch, state.router_states
+            )
+            mets = dict(mets)
+            mets["loss"] = loss
+            return _apply(state, grads, new_router, mets)
+
+        mb = _split_micro(batch, microbatches)
+        # accumulate in the parameter dtype: fp32 accumulation doubles the
+        # carry footprint for bf16-param models (arctic) with negligible
+        # benefit at <=16 microbatches
+        acc_dt = model.cfg.param_dtype
+
+        def body(carry, one):
+            grads_acc, router = carry
+            (loss, (router, mets)), grads = _fwd_bwd(state.params, one, router)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dt), grads_acc, grads
+            )
+            mets = dict(mets)
+            mets["loss"] = loss
+            return (grads_acc, router), mets
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), state.params)
+        (grads, new_router), mets = jax.lax.scan(
+            body, (zero, state.router_states), mb
+        )
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        return _apply(state, grads, new_router, _reduce_micro_mets(mets))
+
     return train_step
+
+
+def compile_train_step(
+    model: Model,
+    opt_cfg: _adamw.AdamWConfig,
+    lr_fn,
+    state: TrainState,
+    batch: Dict[str, Any],
+    *,
+    mesh=None,
+    microbatches: int = 1,
+    donate: bool = True,
+    st_specs=None,
+    b_specs=None,
+):
+    """jit the train step, with explicit shardings when a mesh is given.
+
+    `state`/`batch` may be concrete arrays or ShapeDtypeStructs — only their
+    tree structure and shapes are consulted. On a mesh, every TrainState leaf
+    and batch tensor gets the PartitionSpec from `distributed.sharding` as an
+    explicit in/out sharding (out == in, so the donated buffers alias
+    leaf-for-leaf and the state layout is fixed-point across steps); metrics
+    come back replicated. Callers that already resolved the spec trees (e.g.
+    train_loop, which also places the arrays with them) pass st_specs /
+    b_specs so there is one resolution per run.
+    """
+    step = make_train_step(model, opt_cfg, lr_fn, microbatches=microbatches)
+    donate_argnums = (0,) if donate else ()
+    if mesh is None:
+        return jax.jit(step, donate_argnums=donate_argnums)
+
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import batch_specs, train_state_specs
+
+    if st_specs is None:
+        st_specs = train_state_specs(state, model.cfg, mesh)
+    if b_specs is None:
+        b_all = batch_specs(model.cfg, mesh, jax.tree.leaves(batch)[0].shape[0])
+        b_specs = {k: b_all[k] for k in batch}
+    as_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
+    )
+    return jax.jit(
+        step,
+        in_shardings=(as_sharding(st_specs), as_sharding(b_specs)),
+        out_shardings=(as_sharding(st_specs), None),
+        donate_argnums=donate_argnums,
+    )
 
 
 @dataclasses.dataclass
@@ -113,20 +255,80 @@ def train_loop(
     opt_overrides: Optional[Dict] = None,
     log_every: int = 0,
     state: Optional[TrainState] = None,
+    mesh=None,
+    microbatches: int = 1,
+    donate: bool = True,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    resume: bool = False,
 ) -> Tuple[TrainState, TrainLog]:
+    """Host driver. With `mesh` the state/batches are placed with the specs
+    from `distributed.sharding` and the step compiles with explicit
+    shardings + donation; without one it is the plain single-device jit.
+
+    `resume=True` restores the newest checkpoint under `ckpt_dir` (if any)
+    and skips the already-consumed prefix of the deterministic batch stream,
+    continuing bit-exactly — including the router duals q.
+    """
     from repro.optim.schedules import linear_warmup_cosine
 
     key = key if key is not None else jax.random.PRNGKey(0)
     opt_cfg = _adamw.from_model_config(model.cfg, **(opt_overrides or {}))
+
+    manager = None
+    if ckpt_dir is not None:
+        from repro.checkpoint import CheckpointManager
+
+        manager = CheckpointManager(ckpt_dir)
+
+    start_step = 0
+    if resume and manager is not None and state is None:
+        from repro.checkpoint.store import latest_step
+
+        if latest_step(ckpt_dir) is not None:
+            start_step, state = manager.restore_train_state()
     if state is None:
         state = init_train_state(model, key, opt_cfg)
-    step_fn = jax.jit(
-        make_train_step(model, opt_cfg, linear_warmup_cosine(lr, warmup_steps, total_steps))
-    )
+
+    st_specs = b_specs = None
+    if mesh is not None:
+        from repro.distributed.sharding import (
+            batch_specs,
+            shard_tree,
+            train_state_specs,
+        )
+
+        st_specs = train_state_specs(state, model.cfg, mesh)
+        state = shard_tree(state, st_specs, mesh)
+
+    step_fn = None
     log = TrainLog()
+    mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
+    i = saved_at = -1
     for i, batch in enumerate(batches):
+        if i < start_step:
+            continue  # resumed: this prefix of the stream is already consumed
+        if mesh is not None:
+            if b_specs is None:
+                b_all = batch_specs(model.cfg, mesh, jax.tree.leaves(batch)[0].shape[0])
+                b_specs = {k: b_all[k] for k in batch}
+            batch = shard_tree(batch, b_specs, mesh)
+        if step_fn is None:
+            step_fn = compile_train_step(
+                model,
+                opt_cfg,
+                linear_warmup_cosine(lr, warmup_steps, total_steps),
+                state,
+                batch,
+                mesh=mesh,
+                microbatches=microbatches,
+                donate=donate,
+                st_specs=st_specs,
+                b_specs=b_specs,
+            )
         t0 = time.perf_counter()
-        state, mets = step_fn(state, batch)
+        with mesh_ctx:
+            state, mets = step_fn(state, batch)
         jax.block_until_ready(mets["loss"])
         log.record(mets, time.perf_counter() - t0)
         if log_every and i % log_every == 0:
@@ -138,6 +340,11 @@ def train_loop(
                     else ""
                 )
             )
+        if manager is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+            manager.save_train_state(state)
+            saved_at = i
+    if manager is not None and ckpt_every and saved_at != i:
+        manager.save_train_state(state)  # final state, off-boundary stop
     return state, log
 
 

@@ -1,9 +1,12 @@
 """Distribution-layer tests on a forced multi-device host (subprocesses,
 because XLA locks the device count per process)."""
+import os
 import subprocess
 import sys
 
 import pytest
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(code: str, timeout: int = 600) -> str:
@@ -11,7 +14,7 @@ def _run(code: str, timeout: int = 600) -> str:
         [sys.executable, "-c", code],
         capture_output=True,
         text=True,
-        cwd="/root/repo",
+        cwd=_REPO_ROOT,
         timeout=timeout,
     )
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])

@@ -1,0 +1,279 @@
+"""Production-harness tests: sharded train step parity, buffer donation,
+microbatch gradient accumulation, mixed precision, checkpoint resume.
+
+Multi-device cases run in subprocesses with forced host devices (XLA locks
+the device count per process) — same idiom as test_distributed.py.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim.adamw import from_model_config
+from repro.optim.schedules import constant
+from repro.training import (
+    compile_train_step,
+    init_train_state,
+    make_train_step,
+    train_loop,
+)
+
+
+def _run(code: str, timeout: int = 900) -> str:
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        cwd=_REPO_ROOT,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+"""
+
+
+# ------------------------------------------------- single-process coverage
+
+
+def _smoke_cfg(**overrides):
+    return configs.reduced_for_smoke("minimind_moe_16e", vocab_size=256, **overrides)
+
+
+def test_grad_accum_matches_big_batch():
+    """k sequential microbatches == 1 big batch (same grads, same update).
+
+    strategy='topk' so routing is per-token (no cross-microbatch dual state)
+    and capacity_factor=8 so neither granularity drops tokens — any residual
+    difference is f32 summation order."""
+    cfg = _smoke_cfg()
+    cfg = dataclasses.replace(
+        cfg,
+        routing=dataclasses.replace(
+            cfg.routing, strategy="topk", capacity_factor=8.0
+        ),
+    )
+    model = build_model(cfg)
+    opt_cfg = from_model_config(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    batch = next(iter(make_batches(cfg, 8, 32, 1, seed=0)))
+
+    step1 = jax.jit(make_train_step(model, opt_cfg, constant(1e-3)))
+    stepk = jax.jit(make_train_step(model, opt_cfg, constant(1e-3), microbatches=4))
+    s1, m1 = step1(state, batch)
+    sk, mk = stepk(state, batch)
+
+    assert abs(float(m1["loss"]) - float(mk["loss"])) < 1e-5, (m1["loss"], mk["loss"])
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(sk.params)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4
+        )
+    # microbatched metrics keep the per-layer MaxVio vector
+    assert mk["max_vio_per_layer"].shape == m1["max_vio_per_layer"].shape
+
+
+def test_checkpoint_resume_bit_exact(tmp_path):
+    """save -> resume replays the remaining schedule bit-exactly, router
+    duals q included (strategy='bip' so q is live state, not a constant)."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    steps = 6
+    kw = dict(lr=1e-3, warmup_steps=2, total_steps=steps)
+
+    # reference: straight 6-step run
+    s_ref, log_ref = train_loop(model, make_batches(cfg, 4, 32, steps, seed=0), **kw)
+
+    # part 1: first 3 steps, checkpointing at step 3
+    d = str(tmp_path / "ck")
+    train_loop(
+        model,
+        make_batches(cfg, 4, 32, 3, seed=0),
+        ckpt_dir=d,
+        ckpt_every=3,
+        **kw,
+    )
+    # the checkpointed router state must be the live BIP dual, not init zeros
+    from repro.checkpoint import CheckpointManager
+
+    step, restored = CheckpointManager(d).restore_train_state()
+    assert step == 3
+    qs = [np.asarray(s["q"]) for s in restored.router_states if s is not None]
+    assert qs and any(np.abs(q).sum() > 0 for q in qs), "router duals not saved"
+
+    # part 2: resume and finish — losses and final params must match the
+    # reference run exactly (the data stream is deterministic per index)
+    s_res, log_res = train_loop(
+        model,
+        make_batches(cfg, 4, 32, steps, seed=0),
+        ckpt_dir=d,
+        resume=True,
+        **kw,
+    )
+    assert log_res.losses == log_ref.losses[3:], (log_res.losses, log_ref.losses)
+    for a, b in zip(jax.tree.leaves(s_ref.params), jax.tree.leaves(s_res.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(
+        jax.tree.leaves(s_ref.router_states), jax.tree.leaves(s_res.router_states)
+    ):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mixed_precision_policy():
+    """bf16 compute, fp32 master params + Adam moments (DESIGN.md §Training)."""
+    cfg = _smoke_cfg(compute_dtype=jnp.bfloat16)
+    model = build_model(cfg)
+
+    # forward computes in bf16 ...
+    opt_cfg = from_model_config(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    batch = next(iter(make_batches(cfg, 4, 32, 1, seed=0)))
+    x, _ = model._embed_inputs(state.params, batch)
+    assert x.dtype == jnp.bfloat16  # activations in bf16 (logits upcast for CE)
+
+    # ... while the train step keeps fp32 masters and fp32 moments
+    step = jax.jit(make_train_step(model, opt_cfg, constant(1e-3)))
+    new_state, mets = step(state, batch)
+    assert np.isfinite(float(mets["loss"]))
+    for p in jax.tree.leaves(new_state.params):
+        assert p.dtype == jnp.float32, p.dtype
+    for m in jax.tree.leaves((new_state.opt_state["mu"], new_state.opt_state["nu"])):
+        assert m.dtype == jnp.float32, m.dtype
+
+
+def test_donation_aliases_state_buffers():
+    """The jitted step donates TrainState: the compiled program aliases
+    inputs to outputs, and repeated stepping doesn't accumulate live buffers
+    (the OOM-across-steps failure mode donation exists to prevent)."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    opt_cfg = from_model_config(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    batches = list(make_batches(cfg, 4, 32, 6, seed=0))
+
+    step = make_train_step(model, opt_cfg, constant(1e-3))
+    fn = jax.jit(step, donate_argnums=(0,))
+    txt = fn.lower(state, batches[0]).compile().as_text()
+    assert "input_output_alias" in txt
+
+    state, mets = fn(state, batches[0])
+    state, mets = fn(state, batches[1])
+    jax.block_until_ready(state.params)
+    n_live_warm = len(jax.live_arrays())
+    for b in batches[2:]:
+        state, mets = fn(state, b)
+        jax.block_until_ready(mets["loss"])
+    assert len(jax.live_arrays()) <= n_live_warm + 4, (
+        n_live_warm,
+        len(jax.live_arrays()),
+    )
+
+
+# ----------------------------------------------------- multi-device (8-way)
+
+
+def test_sharded_train_loop_matches_single_device():
+    """train_loop on a 4x2 host mesh (explicit in/out shardings + donation)
+    reproduces the single-device losses/params, and the sharded compiled
+    step both aliases its state buffers and holds live-buffer count flat
+    across steps."""
+    _run(PRELUDE + r"""
+from repro import configs
+from repro.data import make_batches
+from repro.distributed import make_mesh_ctx
+from repro.models import build_model
+from repro.optim.adamw import from_model_config
+from repro.optim.schedules import constant
+from repro.training import compile_train_step, init_train_state, train_loop
+
+cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=256)
+steps = 3
+kw = dict(lr=1e-3, warmup_steps=1, total_steps=steps)
+
+model0 = build_model(cfg)
+s0, log0 = train_loop(model0, make_batches(cfg, 8, 64, steps, seed=0), **kw)
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+model1 = build_model(cfg, make_mesh_ctx(mesh))
+s1, log1 = train_loop(model1, make_batches(cfg, 8, 64, steps, seed=0), mesh=mesh, **kw)
+
+for a, b in zip(log0.losses, log1.losses):
+    assert abs(a - b) / abs(a) < 2e-2, (log0.losses, log1.losses)
+for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(jax.device_get(s1.params))):
+    np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+# donation under explicit shardings: aliased buffers, flat live-array count
+opt_cfg = from_model_config(cfg)
+state = init_train_state(model1, jax.random.PRNGKey(0), opt_cfg)
+batches = list(make_batches(cfg, 8, 64, 6, seed=0))
+fn = compile_train_step(model1, opt_cfg, constant(1e-3), state, batches[0], mesh=mesh)
+with mesh:
+    txt = fn.lower(state, batches[0]).compile().as_text()
+    assert "input_output_alias" in txt
+    state, mets = fn(state, batches[0])
+    state, mets = fn(state, batches[1])
+    jax.block_until_ready(state.params)
+    n_live_warm = len(jax.live_arrays())
+    for b in batches[2:]:
+        state, mets = fn(state, b)
+        jax.block_until_ready(mets["loss"])
+    n_live_end = len(jax.live_arrays())
+assert n_live_end <= n_live_warm + 8 * 4, (n_live_warm, n_live_end)
+print("OK", log0.losses[-1], log1.losses[-1])
+""")
+
+
+def test_sharded_grad_accum_on_mesh():
+    """Microbatched sharded step == unmicrobatched sharded step (topk, no
+    drops): grad accumulation composes with FSDP/TP shardings."""
+    _run(PRELUDE + r"""
+from repro import configs
+from repro.data import make_batches
+from repro.distributed import make_mesh_ctx, shard_tree, train_state_specs, batch_specs
+from repro.models import build_model
+from repro.optim.adamw import from_model_config
+from repro.optim.schedules import constant
+from repro.training import compile_train_step, init_train_state
+
+cfg = configs.reduced_for_smoke("minimind_moe_16e", vocab_size=256)
+cfg = dataclasses.replace(
+    cfg, routing=dataclasses.replace(cfg.routing, strategy="topk", capacity_factor=8.0))
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+model = build_model(cfg, make_mesh_ctx(mesh))
+opt_cfg = from_model_config(cfg)
+batch = next(iter(make_batches(cfg, 8, 32, 1, seed=0)))
+
+outs = []
+for micro in (1, 2):
+    # fresh state per run: donation consumes the sharded buffers, and
+    # device_put may alias rather than copy, so never reuse a donated tree
+    state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    st = shard_tree(state, train_state_specs(state, cfg, mesh), mesh)
+    fn = compile_train_step(model, opt_cfg, constant(1e-3), st, batch,
+                            mesh=mesh, microbatches=micro)
+    with mesh:
+        s_new, mets = fn(st, batch)
+    outs.append((jax.device_get(s_new.params), float(mets["loss"])))
+
+assert abs(outs[0][1] - outs[1][1]) < 1e-5, (outs[0][1], outs[1][1])
+for a, b in zip(jax.tree.leaves(outs[0][0]), jax.tree.leaves(outs[1][0])):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+print("OK")
+""")
