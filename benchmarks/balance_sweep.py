@@ -25,6 +25,14 @@ step", paper §4.2): BIP must hold MaxVio near 0 from step 0 while the
 learning-based baselines start unbalanced and converge slowly — and topk
 drifts. Writes BENCH_balance_sweep.json and prints the repo-contract CSV
 ``name,us_per_call,derived``.
+
+``--data DIR_OR_GLOB`` swaps the synthetic stream for the real-text
+pipeline (DESIGN.md §Data): a byte-BPE tokenizer is trained once per
+config on the corpus (or loaded via --tokenizer), and every method reads
+the SAME shuffled+packed document stream — real corpora are where routing
+skew actually bites (the synthetic stream's near-uniform statistics
+understate it), so this is the claim-bearing mode for the paper's
+balance-on-real-data story.
 """
 from __future__ import annotations
 
@@ -50,7 +58,38 @@ def _sweep_cfg(arch: str):
     return configs.reduced_for_smoke(arch, routing=full.routing)
 
 
-def _run_method(cfg, method: str, steps: int, lr: float) -> Dict[str, Any]:
+def _get_tokenizer(data: str, tokenizer_path: str, vocab_size: int):
+    """Load --tokenizer if given+present, else train on the corpus (cached
+    per vocab size so the 16e/64e configs don't retrain)."""
+    import os
+
+    from repro.data import ByteBPETokenizer, resolve_shards, train_tokenizer_from_files
+
+    if tokenizer_path and os.path.exists(tokenizer_path):
+        tok = ByteBPETokenizer.load(tokenizer_path)
+        assert tok.vocab_size <= vocab_size, (
+            f"tokenizer vocab {tok.vocab_size} exceeds model vocab {vocab_size}"
+        )
+        return tok
+    cache = _get_tokenizer.__dict__.setdefault("cache", {})
+    if vocab_size not in cache:
+        cache[vocab_size] = train_tokenizer_from_files(
+            resolve_shards(data), vocab_size=vocab_size
+        )
+        if tokenizer_path:
+            cache[vocab_size].save(tokenizer_path)
+    return cache[vocab_size]
+
+
+def _run_method(
+    cfg,
+    method: str,
+    steps: int,
+    lr: float,
+    data: str = None,
+    tokenizer_path: str = None,
+    pack_mode: str = "pack",
+) -> Dict[str, Any]:
     import jax
     import numpy as np
 
@@ -62,7 +101,19 @@ def _run_method(cfg, method: str, steps: int, lr: float) -> Dict[str, Any]:
         cfg, routing=dataclasses.replace(cfg.routing, strategy=method)
     )
     model = build_model(cfg)
-    batches = make_batches(cfg, BATCH, SEQ_LEN, steps, seed=0)
+    if data:
+        from repro.data import Prefetcher, ShardedTextLoader, resolve_shards
+
+        tok = _get_tokenizer(data, tokenizer_path, cfg.vocab_size)
+        # same shards + seed per method -> identical document stream
+        batches = Prefetcher(
+            ShardedTextLoader(
+                resolve_shards(data), tok,
+                batch_size=BATCH, seq_len=SEQ_LEN, pack_mode=pack_mode, seed=0,
+            )
+        )
+    else:
+        batches = make_batches(cfg, BATCH, SEQ_LEN, steps, seed=0)
     t0 = time.perf_counter()
     _, log = train_loop(
         model,
@@ -86,8 +137,16 @@ def _run_method(cfg, method: str, steps: int, lr: float) -> Dict[str, Any]:
     }
 
 
-def run(smoke: bool = False, steps: int = 0) -> List[Dict[str, Any]]:
-    """Returns CSV rows; writes BENCH_balance_sweep.json as a side effect."""
+def run(
+    smoke: bool = False,
+    steps: int = 0,
+    data: str = None,
+    tokenizer_path: str = None,
+    pack_mode: str = "pack",
+) -> List[Dict[str, Any]]:
+    """Returns CSV rows; writes BENCH_balance_sweep.json as a side effect
+    (BENCH_balance_sweep_data.json in --data mode, so the synthetic table
+    isn't clobbered)."""
     import numpy as np
 
     steps = steps or (12 if smoke else 80)
@@ -96,10 +155,13 @@ def run(smoke: bool = False, steps: int = 0) -> List[Dict[str, Any]]:
             "batch": BATCH,
             "seq_len": SEQ_LEN,
             "steps": steps,
+            "data": data,
+            "pack_mode": pack_mode if data else None,
             "note": (
                 "reduced minimind-moe geometry at real expert counts; "
                 "identical init + token stream per method; MaxVio = "
                 "max_load/mean_load - 1 per MoE layer per batch"
+                + ("; real-text stream via data/ pipeline" if data else "")
             ),
         },
         "configs": {},
@@ -116,12 +178,16 @@ def run(smoke: bool = False, steps: int = 0) -> List[Dict[str, Any]]:
             "methods": {},
         }
         for method in METHODS:
-            rec = _run_method(cfg, method, steps, lr=1e-3)
+            rec = _run_method(
+                cfg, method, steps, lr=1e-3,
+                data=data, tokenizer_path=tokenizer_path, pack_mode=pack_mode,
+            )
             entry["methods"][method] = rec
             step_s = rec["mean_step_time"] or float(np.mean(rec["step_time_s"]))
+            suffix = "_data" if data else ""
             rows.append(
                 {
-                    "name": f"balance_sweep_{cfg.name}_{method}",
+                    "name": f"balance_sweep_{cfg.name}_{method}{suffix}",
                     "us_per_call": round(step_s * 1e6, 1),
                     "derived": (
                         f"AvgMaxVio={rec['AvgMaxVio']:.4f};"
@@ -140,7 +206,9 @@ def run(smoke: bool = False, steps: int = 0) -> List[Dict[str, Any]]:
             )
         out["configs"][cfg.name] = entry
 
-    with open("BENCH_balance_sweep.json", "w") as f:
+    with open(
+        "BENCH_balance_sweep_data.json" if data else "BENCH_balance_sweep.json", "w"
+    ) as f:
         json.dump(out, f, indent=1)
     return rows
 
@@ -149,8 +217,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI guard: few steps")
     ap.add_argument("--steps", type=int, default=0, help="override step count")
+    ap.add_argument("--data", default=None,
+                    help="corpus dir/glob: run the sweep on real text through "
+                         "the streaming data pipeline instead of synthetic")
+    ap.add_argument("--tokenizer", default=None,
+                    help="tokenizer JSON (trained on --data if missing)")
+    ap.add_argument("--pack-mode", default="pack",
+                    choices=["pack", "pack_nocross", "pad"])
     args = ap.parse_args(argv)
-    for r in run(smoke=args.smoke, steps=args.steps):
+    for r in run(smoke=args.smoke, steps=args.steps, data=args.data,
+                 tokenizer_path=args.tokenizer, pack_mode=args.pack_mode):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
     return 0
 

@@ -11,6 +11,7 @@ Benchmarks:
   step-time model (the >=13% training-time mechanism)   -> benchmarks.steptime_model
   kernel microbench (ADMM iteration + expert GEMM)      -> below
   dispatch plan old-vs-new + Pallas FFN                 -> benchmarks.moe_dispatch
+  streaming data pipeline (tokens/s, prefetch overlap)  -> benchmarks.data_pipeline
   roofline table (if dry-run results exist)             -> benchmarks.roofline
 """
 from __future__ import annotations
@@ -111,6 +112,13 @@ def main() -> None:
         from benchmarks import balance_sweep
 
         for r in balance_sweep.run(smoke=not args.full):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
+    if not args.skip_train:
+        print("# streaming data pipeline (host tokens/s, prefetch overlap)", flush=True)
+        from benchmarks import data_pipeline
+
+        for r in data_pipeline.run(smoke=not args.full):
             print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
     print("# step-time model (>=13% saving mechanism)", flush=True)

@@ -5,12 +5,25 @@ jax.device_get, which gathers sharded arrays to host — fine for the model
 sizes we *train* here. The format keeps dtype (incl. bfloat16 via a view
 trick) and the exact tree structure, so save->load roundtrips through jit
 boundaries and across strategy changes (router state q is a plain leaf).
+
+Async saves (`save_train_state(..., block=False)`): the main thread takes
+a *device-side copy* of every leaf (safe against the next step donating
+the original buffers), kicks off the device→host transfers, and hands the
+copies to a writer thread that gathers + writes the npz while the step
+loop keeps running. Saves are serialized — the next save (and `wait()`)
+barriers on the previous writer, so at most one write is in flight and
+checkpoints land in step order.
+
+Data-stream cursors (`data/loader.py` state_dict) ride in a JSON sidecar
+`step_N.data.json` next to the TrainState npz, kept/garbage-collected as
+one unit with it.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -83,7 +96,12 @@ def save_pytree(path: str, tree: Any) -> None:
     arrays["__meta__"] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8
     )
-    np.savez(path, **arrays)
+    # tmp + rename: readers (latest_step / async-save overlap) never see a
+    # partially-written archive
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
 
 
 def load_pytree(path: str) -> Any:
@@ -150,6 +168,8 @@ class CheckpointManager:
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.dir = ckpt_dir
         self.keep = keep
+        self._writer: Optional[threading.Thread] = None
+        self._writer_err: Optional[BaseException] = None
         os.makedirs(ckpt_dir, exist_ok=True)
 
     def save(self, step: int, tree: Any) -> str:
@@ -158,7 +178,17 @@ class CheckpointManager:
         self._gc()
         return path
 
+    def wait(self) -> None:
+        """Barrier on the in-flight async write (no-op when none)."""
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        if self._writer_err is not None:
+            err, self._writer_err = self._writer_err, None
+            raise err
+
     def restore(self, step: Optional[int] = None) -> Tuple[int, Any]:
+        self.wait()  # an in-flight async write may hold the newest step
         step = step if step is not None else latest_step(self.dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
@@ -166,20 +196,80 @@ class CheckpointManager:
 
     # ------------------------------------------------- full training state
 
-    def save_train_state(self, state) -> str:
+    def save_train_state(
+        self, state, data_state: Optional[Dict] = None, block: bool = True
+    ) -> str:
         """Persist a full TrainState — params, Adam moments + step counter,
         and the router states (the BIP dual q / Loss-Free bias) — under the
         step index recorded in the optimizer, so a restored run continues
-        bit-exactly where this one stopped."""
+        bit-exactly where this one stopped.
+
+        `data_state` (a BatchStream cursor) lands in `step_N.data.json`.
+        `block=False` overlaps the host gather + npz write with the caller's
+        next steps: leaves are device-copied up front (donation-safe), then
+        written on a background thread; the next save / `wait()` barriers."""
+        self.wait()  # double-buffer: at most one write in flight
         step = int(jax.device_get(state.opt_state["step"]))
-        return self.save(
-            step,
-            {
-                "params": state.params,
-                "opt_state": state.opt_state,
-                "router_states": state.router_states,
-            },
+        tree = {
+            "params": state.params,
+            "opt_state": state.opt_state,
+            "router_states": state.router_states,
+        }
+        path = os.path.join(self.dir, f"step_{step}.npz")
+        if block:
+            save_pytree(path, tree)
+            self._write_data_state(step, data_state)
+            self._gc()
+            return path
+
+        # device-side copy: the originals may be donated by the very next
+        # train step, so the writer must never touch them
+        def snap_leaf(a):
+            if isinstance(a, jax.Array):
+                c = jnp.copy(a)
+                try:
+                    c.copy_to_host_async()
+                except Exception:
+                    pass  # backends without async host copy just gather later
+                return c
+            return np.asarray(a)
+
+        snap = jax.tree.map(snap_leaf, tree)
+
+        def write():
+            try:
+                save_pytree(path, snap)
+                self._write_data_state(step, data_state)
+                self._gc()
+            except BaseException as e:  # re-raised at the next wait()
+                self._writer_err = e
+
+        self._writer = threading.Thread(
+            target=write, name=f"repro-ckpt-{step}", daemon=True
         )
+        self._writer.start()
+        return path
+
+    def _write_data_state(self, step: int, data_state: Optional[Dict]) -> None:
+        if data_state is None:
+            return
+        tmp = os.path.join(self.dir, f".step_{step}.data.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(data_state, f)
+        os.replace(tmp, os.path.join(self.dir, f"step_{step}.data.json"))
+
+    def restore_data_state(self, step: Optional[int] = None) -> Optional[Dict]:
+        """The BatchStream cursor saved with `step` (None = newest), or None
+        when that checkpoint predates the data pipeline / used a plain
+        iterable."""
+        step = step if step is not None else latest_step(self.dir)
+        if step is None:
+            return None
+        path = os.path.join(self.dir, f"step_{step}.data.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
 
     def restore_train_state(self, step: Optional[int] = None) -> Tuple[int, Any]:
         """Inverse of save_train_state. Returns (step, TrainState) with every
@@ -202,3 +292,6 @@ class CheckpointManager:
         )
         for s in steps[: -self.keep]:
             os.remove(os.path.join(self.dir, f"step_{s}.npz"))
+            sidecar = os.path.join(self.dir, f"step_{s}.data.json")
+            if os.path.exists(sidecar):
+                os.remove(sidecar)

@@ -1,4 +1,32 @@
-"""repro.data — synthetic LM data pipeline."""
-from repro.data.synthetic import SyntheticLMDataset, make_batches, input_specs
+"""repro.data — synthetic + real-text streaming data pipeline (DESIGN.md §Data)."""
+from repro.data.loader import BatchStream, ShardedTextLoader, resolve_shards
+from repro.data.packing import PACK_MODES, SequencePacker, examples_to_batch
+from repro.data.prefetch import Prefetcher
+from repro.data.synthetic import (
+    SyntheticBatchStream,
+    SyntheticLMDataset,
+    input_specs,
+    make_batches,
+)
+from repro.data.tokenizer import (
+    ByteBPETokenizer,
+    iter_corpus_texts,
+    train_tokenizer_from_files,
+)
 
-__all__ = ["SyntheticLMDataset", "make_batches", "input_specs"]
+__all__ = [
+    "BatchStream",
+    "ByteBPETokenizer",
+    "PACK_MODES",
+    "Prefetcher",
+    "SequencePacker",
+    "ShardedTextLoader",
+    "SyntheticBatchStream",
+    "SyntheticLMDataset",
+    "examples_to_batch",
+    "input_specs",
+    "iter_corpus_texts",
+    "make_batches",
+    "resolve_shards",
+    "train_tokenizer_from_files",
+]

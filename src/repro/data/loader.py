@@ -1,0 +1,233 @@
+"""Deterministic, resumable, rank-sharded text-shard loader (DESIGN.md §Data).
+
+`ShardedTextLoader` reads .jsonl / .txt shards and yields model-ready
+batches (tokens / labels [/ segments]) through tokenize -> shuffle-buffer
+-> pack stages. Two properties the training harness depends on:
+
+* **Determinism + rank sharding** — documents are numbered in (epoch,
+  file, line) order; rank r of world W owns documents with index % W == r.
+  Every rank scans the same shard list (document striding, not file
+  striding, so any W partitions any corpus evenly) and the per-rank stream
+  is a pure function of (shards, seed, rank, world_size).
+* **Checkpointable cursor** — `state_dict()` captures the full stream
+  state: (epoch, file index, byte offset, document counter), the
+  shuffle-buffer RNG *and contents*, the packer's pending tail, and
+  already-packed-but-unbatched windows. `load_state_dict()` seeks straight
+  to the byte offset, so `train_loop(resume=True)` restarts bit-exactly in
+  O(1) — no replay of the consumed prefix.
+
+The whole state is JSON-serializable (ints, lists, the PCG64 state dict),
+sized by shuffle_buffer ≈ buffered documents — it rides in a sidecar file
+next to the TrainState npz (checkpoint/store.py).
+"""
+from __future__ import annotations
+
+import glob as _glob
+import os
+from typing import Dict, Iterator, List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.data.packing import SequencePacker, examples_to_batch
+from repro.data.tokenizer import ByteBPETokenizer, parse_doc_line
+
+
+@runtime_checkable
+class BatchStream(Protocol):
+    """An iterable of batch dicts with a checkpointable cursor.
+
+    `state_dict()` must describe exactly the batches already yielded, so
+    that a fresh stream + `load_state_dict()` continues with the next
+    batch bit-exactly (train_loop checkpoints it alongside TrainState)."""
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]: ...
+
+    def state_dict(self) -> Dict: ...
+
+    def load_state_dict(self, state: Dict) -> None: ...
+
+
+def resolve_shards(data: str) -> List[str]:
+    """Expand a directory / glob / single file into a sorted shard list."""
+    if os.path.isdir(data):
+        paths = [
+            os.path.join(data, f)
+            for f in os.listdir(data)
+            if f.endswith((".jsonl", ".txt"))
+        ]
+    elif any(ch in data for ch in "*?["):
+        paths = _glob.glob(data)
+    else:
+        paths = [data]
+    paths = sorted(paths)
+    if not paths:
+        raise FileNotFoundError(f"no .jsonl/.txt shards under {data!r}")
+    return paths
+
+
+class ShardedTextLoader:
+    """BatchStream over text shards: tokenize -> shuffle -> pack -> batch.
+
+    epochs=None loops the corpus forever (reshuffling each epoch with a
+    deterministic per-epoch seed); a finite epoch count flushes the packer
+    at the end and drops the final sub-batch-size remainder (static batch
+    shapes keep the jit cache to one entry).
+    """
+
+    def __init__(
+        self,
+        shards: Sequence[str],
+        tokenizer: ByteBPETokenizer,
+        *,
+        batch_size: int,
+        seq_len: int,
+        pack_mode: str = "pack",
+        rank: int = 0,
+        world_size: int = 1,
+        shuffle_buffer: int = 64,
+        seed: int = 0,
+        epochs: Optional[int] = None,
+    ):
+        assert 0 <= rank < world_size
+        self.shards = [str(p) for p in shards]
+        self.tokenizer = tokenizer
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.pack_mode = pack_mode
+        self.rank = rank
+        self.world_size = world_size
+        self.shuffle_buffer = max(1, shuffle_buffer)
+        self.seed = seed
+        self.epochs = epochs
+
+        self._epoch = 0
+        self._file_idx = 0
+        self._byte_offset = 0
+        self._doc_count = 0  # global (all-rank) doc counter within the epoch
+        self._rng = np.random.default_rng(self._epoch_seed(0))
+        self._buffer: List[List[int]] = []  # tokenized docs awaiting shuffle-pop
+        self._packer = SequencePacker(seq_len, tokenizer.eos_id, pack_mode)
+        self._pending: List[Dict[str, np.ndarray]] = []  # packed windows
+        self._batches_emitted = 0
+        self._exhausted = False
+        self._fh = None
+
+    # ----------------------------------------------------------- reading
+
+    def _epoch_seed(self, epoch: int) -> np.random.SeedSequence:
+        return np.random.SeedSequence([self.seed, epoch])
+
+    def _open(self):
+        if self._fh is None and self._file_idx < len(self.shards):
+            self._fh = open(self.shards[self._file_idx], "r", encoding="utf-8")
+            self._fh.seek(self._byte_offset)
+        return self._fh
+
+    def _next_rank_doc(self) -> Optional[List[int]]:
+        """Next tokenized document owned by this rank, advancing the cursor;
+        None at end of the final allowed epoch."""
+        while True:
+            fh = self._open()
+            if fh is None:  # epoch exhausted
+                if self.epochs is not None and self._epoch + 1 >= self.epochs:
+                    return None
+                self._epoch += 1
+                self._file_idx = 0
+                self._byte_offset = 0
+                self._doc_count = 0
+                self._rng = np.random.default_rng(self._epoch_seed(self._epoch))
+                continue
+            line = fh.readline()
+            if not line:
+                fh.close()
+                self._fh = None
+                self._file_idx += 1
+                self._byte_offset = 0
+                continue
+            self._byte_offset = fh.tell()
+            if not line.rstrip("\n"):
+                continue  # blanks don't consume a document index
+            idx = self._doc_count
+            self._doc_count += 1
+            if idx % self.world_size != self.rank:
+                continue  # another rank's document: skip without parsing
+            text = parse_doc_line(self.shards[self._file_idx], line)
+            ids = self.tokenizer.encode(text)
+            if ids:
+                return ids
+
+    # ----------------------------------------------------------- batching
+
+    def _pump(self) -> bool:
+        """Advance the pipeline one document; False when fully exhausted."""
+        if not self._exhausted:
+            doc = self._next_rank_doc()
+            if doc is None:
+                self._exhausted = True
+            else:
+                self._buffer.append(doc)
+                if len(self._buffer) < self.shuffle_buffer:
+                    return True
+        if not self._buffer:
+            return False
+        pick = int(self._rng.integers(len(self._buffer)))
+        self._pending.extend(self._packer.add_document(self._buffer.pop(pick)))
+        return True
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            while len(self._pending) < self.batch_size:
+                if not self._pump():
+                    break
+            if len(self._pending) < self.batch_size and self._exhausted:
+                if not self._buffer:
+                    self._pending.extend(self._packer.flush())
+                if len(self._pending) < self.batch_size:
+                    return  # drop the ragged remainder: batch shape is static
+            batch = examples_to_batch(self._pending[: self.batch_size])
+            self._pending = self._pending[self.batch_size :]
+            self._batches_emitted += 1
+            yield batch
+
+    # -------------------------------------------------------------- state
+
+    def state_dict(self) -> Dict:
+        return {
+            "version": 1,
+            "epoch": self._epoch,
+            "file_idx": self._file_idx,
+            "byte_offset": self._byte_offset,
+            "doc_count": self._doc_count,
+            "rng_state": self._rng.bit_generator.state,
+            "buffer": [list(d) for d in self._buffer],
+            "packer": self._packer.state_dict(),
+            "pending": [
+                {k: np.asarray(v).tolist() for k, v in ex.items()}
+                for ex in self._pending
+            ],
+            "batches_emitted": self._batches_emitted,
+            "exhausted": self._exhausted,
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        assert state.get("version") == 1, state.get("version")
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        self._epoch = int(state["epoch"])
+        self._file_idx = int(state["file_idx"])
+        self._byte_offset = int(state["byte_offset"])
+        self._doc_count = int(state["doc_count"])
+        self._rng = np.random.default_rng(0)
+        self._rng.bit_generator.state = state["rng_state"]
+        self._buffer = [list(map(int, d)) for d in state["buffer"]]
+        self._packer.load_state_dict(state["packer"])
+        self._pending = [
+            {
+                k: np.asarray(v, bool if k == "valid" else np.int32)
+                for k, v in ex.items()
+            }
+            for ex in state["pending"]
+        ]
+        self._batches_emitted = int(state["batches_emitted"])
+        self._exhausted = bool(state["exhausted"])

@@ -1,0 +1,135 @@
+"""Background host->device prefetch for BatchStreams (DESIGN.md §Data).
+
+A producer thread pulls batches from the wrapped stream, optionally
+`jax.device_put`s them (starting the H2D transfer off the step's critical
+path), and parks them in a bounded queue (depth 2 = classic double
+buffering: one batch on device being consumed, one in flight). The main
+thread's `next()` then returns an already-resident batch, so host-side
+tokenize/pack/transfer overlaps the previous device step.
+
+Checkpoint semantics: each queue item carries the stream's `state_dict()`
+snapshot taken *after* that batch was produced. `state_dict()` on the
+prefetcher returns the snapshot of the last batch the **consumer** took —
+not the producer's read-ahead position — so a resume never skips the
+read-ahead batches sitting in the queue.
+
+`close()` (or the context manager / generator-close path) stops the
+producer even if it is blocked on a full queue, and joins the thread —
+early-stopping consumers never leak a thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+_SENTINEL = object()
+
+
+class Prefetcher:
+    """Wrap a BatchStream with a depth-bounded background producer."""
+
+    def __init__(self, stream, depth: int = 2, device_put: Optional[bool] = None):
+        assert depth >= 1
+        self.stream = stream
+        self.depth = depth
+        # None = auto: transfer eagerly on real accelerators; on the CPU
+        # backend there is no H2D copy to hide, so skip the extra dispatch
+        self.device_put = device_put
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._last_state: Optional[Dict] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ producer
+
+    def _produce(self):
+        try:
+            put = self.device_put
+            if put is None:
+                import jax
+
+                put = jax.default_backend() != "cpu"
+            for batch in self.stream:
+                if put:
+                    import jax
+
+                    batch = jax.device_put(batch)
+                snap = self.stream.state_dict() if hasattr(self.stream, "state_dict") else None
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((batch, snap), timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as e:  # surfaced to the consumer on next()
+            self._err = e
+        finally:
+            while not self._stop.is_set():
+                try:
+                    self._q.put(_SENTINEL, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+
+    # ------------------------------------------------------------ consumer
+
+    def __iter__(self) -> Iterator[Dict]:
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._produce, name="repro-prefetch", daemon=True
+            )
+            self._thread.start()
+        try:
+            while True:
+                item = self._q.get()
+                if item is _SENTINEL:
+                    if self._err is not None:
+                        raise self._err
+                    return
+                batch, snap = item
+                self._last_state = snap
+                yield batch
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        """Stop the producer (even mid-put) and join it."""
+        self._stop.set()
+        if self._thread is not None:
+            while True:  # unblock a producer stuck on a full queue
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            self._thread.join(timeout=5.0)
+            if self._thread.is_alive():
+                # keep _thread set: the stream may still be mutating, so
+                # load_state_dict / re-iteration must stay refused
+                raise RuntimeError(
+                    "prefetch producer did not stop within 5s "
+                    "(blocked inside the wrapped stream?)"
+                )
+            self._thread = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # --------------------------------------------------------------- state
+
+    def state_dict(self) -> Dict:
+        """Cursor of the last *consumed* batch (read-ahead not counted)."""
+        if self._last_state is not None:
+            return self._last_state
+        return self.stream.state_dict()
+
+    def load_state_dict(self, state: Dict) -> None:
+        assert self._thread is None, "load_state_dict before iteration starts"
+        self.stream.load_state_dict(state)

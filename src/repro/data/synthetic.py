@@ -80,6 +80,52 @@ def make_batches(cfg: ModelConfig, batch_size: int, seq_len: int, n_batches: int
         yield batch
 
 
+class SyntheticBatchStream:
+    """`make_batches` behind the checkpointable BatchStream cursor protocol.
+
+    Each batch is a pure function of (cfg, seed, split, step), so the whole
+    cursor is the step index: `load_state_dict({"step": n})` resumes in
+    O(1) instead of regenerating and discarding the consumed prefix the way
+    a plain generator forces `train_loop` to (see data/loader.BatchStream).
+    """
+
+    def __init__(self, cfg: ModelConfig, batch_size: int, seq_len: int,
+                 n_batches: int, seed: int = 0, split: str = "train"):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.n_batches = n_batches
+        self.seed = seed
+        self.split = split
+        self._ds = SyntheticLMDataset(cfg.vocab_size, seq_len, seed=seed)
+        self._step = 0
+
+    def _one(self, b: int) -> Dict[str, jnp.ndarray]:
+        base = self.seed * 1_000_003 + (500_000 if self.split == "test" else 0)
+        rng = np.random.default_rng(base + b)
+        toks = np.stack(
+            [self._ds.sample_tokens(rng, self.seq_len + 1) for _ in range(self.batch_size)]
+        )
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+        _add_frontend_stubs(self.cfg, batch, self.batch_size, numeric=True, seed=self.seed)
+        return batch
+
+    def __iter__(self):
+        while self._step < self.n_batches:
+            batch = self._one(self._step)
+            self._step += 1
+            yield batch
+
+    def state_dict(self) -> Dict:
+        return {"step": self._step}
+
+    def load_state_dict(self, state: Dict) -> None:
+        self._step = int(state["step"])
+
+
 def _add_frontend_stubs(cfg, batch, batch_size, numeric=False, seed=0):
     if cfg.family == "vlm":
         shape = (batch_size, cfg.frontend_tokens, cfg.frontend_dim)

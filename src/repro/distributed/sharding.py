@@ -167,7 +167,7 @@ def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_size: int) -> Dict[str, P]:
     bspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
     if batch_size % dsize != 0 or batch_size < dsize:
         bspec = None  # tiny batches (long_500k) stay replicated
-    out = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    out = {"tokens": P(bspec, None), "labels": P(bspec, None), "segments": P(bspec, None)}
     if cfg.family == "vlm":
         out["patches"] = P(bspec, None, None)
     if cfg.family == "encdec":

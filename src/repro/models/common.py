@@ -132,10 +132,15 @@ def attention(
     *,
     layer_kind: str = "global",  # 'global' | 'local'
     positions: Optional[jnp.ndarray] = None,
+    segments: Optional[jnp.ndarray] = None,  # (B, S) document ids
     mesh_ctx=None,
     causal: bool = True,
 ) -> jnp.ndarray:
     """Training / prefill attention with two memory-bounded layouts.
+
+    `segments` (when given) restricts attention to seg_q == seg_k: packed
+    multi-document sequences (data/packing.py 'pack_nocross') attend only
+    within their own document, at zero cost when absent.
 
     * heads % model_axis == 0 (or no mesh): Megatron layout — heads shard
       over 'model'; queries are processed in chunks via lax.scan so only one
@@ -184,6 +189,12 @@ def attention(
     n_chunks = q.shape[1] // chunk
     qc = q.reshape(b, n_chunks, chunk, cfg.n_heads, hd)
     pc = jnp.broadcast_to(qpos, (b, qpos.shape[-1])).reshape(b, n_chunks, chunk)
+    sc = None
+    if segments is not None:
+        segq = jnp.broadcast_to(segments, (b, s))
+        if pad:  # padded query rows get a segment no key carries
+            segq = jnp.pad(segq, ((0, 0), (0, pad)), constant_values=-2)
+        sc = segq.reshape(b, n_chunks, chunk)
     if msize:
         if seq_parallel:
             qc = mesh_ctx.constrain(qc, bspec, None, "model", None, None)
@@ -191,15 +202,21 @@ def attention(
             qc = mesh_ctx.constrain(qc, bspec, None, None, "model", None)
 
     def body(carry, inp):
-        qi, pi = inp  # (B, chunk, H, D), (B, chunk)
+        qi, pi = inp[0], inp[1]  # (B, chunk, H, D), (B, chunk)
         if causal:
             mask = causal_window_mask(pi, positions, window)[:, None]  # (B,1,c,S)
         else:
             mask = (pi >= 0)[:, None, :, None] & jnp.ones((1, 1, 1, s), bool)
+        if segments is not None:
+            si = inp[2]  # (B, chunk)
+            mask = mask & (si[:, :, None] == segments[:, None, :])[:, None]
         yi = _attend(qi, k, v, mask, cfg.attn_logit_softcap, cfg.compute_dtype)
         return carry, yi
 
-    _, ys = lax.scan(body, None, (qc.swapaxes(0, 1), pc.swapaxes(0, 1)))
+    xs = (qc.swapaxes(0, 1), pc.swapaxes(0, 1))
+    if sc is not None:
+        xs = xs + (sc.swapaxes(0, 1),)
+    _, ys = lax.scan(body, None, xs)
     y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, cfg.n_heads, hd)
     if pad:
         y = y[:, :s]

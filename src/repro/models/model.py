@@ -162,6 +162,7 @@ class Model:
         params: Params,
         batch: Dict[str, jnp.ndarray],
         router_states: list,
+        rng: Optional[jnp.ndarray] = None,
     ) -> Tuple[jnp.ndarray, list, jnp.ndarray, Dict]:
         cfg = self.cfg
         mc = self.mesh_ctx
@@ -169,14 +170,28 @@ class Model:
         x = mc.constrain(x, mc.batch_spec, None, None)
         enc_out = self._encode(params, batch)
         positions = jnp.arange(x.shape[1])[None, :]
+        # packed real-text batches carry per-position document ids; the
+        # attention mask then stays within-document (modality-prefix models
+        # never pack, so the prefix offset never meets segments)
+        segments = batch.get("segments") if n_prefix == 0 else None
+        if segments is not None and cfg.family in ("ssm", "hybrid"):
+            # the SSM recurrence carries state across the packed boundary —
+            # the mask can't cut it, so refuse rather than silently leak
+            raise ValueError(
+                "segment-masked packing (pack_nocross) is attention-only; "
+                f"{cfg.family} architectures leak document state through the "
+                "mamba recurrence — use pack_mode='pack' or 'pad'"
+            )
         x, new_states, aux, mets = stack.apply_stack(
             params["stack"],
             x,
             router_states,
             cfg,
             positions=positions,
+            segments=segments,
             enc_out=enc_out,
             mesh_ctx=self.mesh_ctx,
+            rng=rng,
         )
         x = common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
         if n_prefix:
@@ -188,9 +203,13 @@ class Model:
         return logits, new_states, aux, mets
 
     def loss_fn(
-        self, params: Params, batch: Dict[str, jnp.ndarray], router_states: list
+        self,
+        params: Params,
+        batch: Dict[str, jnp.ndarray],
+        router_states: list,
+        rng: Optional[jnp.ndarray] = None,
     ):
-        logits, new_states, aux, mets = self.forward(params, batch, router_states)
+        logits, new_states, aux, mets = self.forward(params, batch, router_states, rng=rng)
         labels = batch["labels"]
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]

@@ -127,11 +127,14 @@ def apply_layer(
     router_state: Optional[Dict[str, jnp.ndarray]],
     *,
     positions: Optional[jnp.ndarray] = None,
+    segments: Optional[jnp.ndarray] = None,
     enc_out: Optional[jnp.ndarray] = None,
     shared_params: Optional[Params] = None,
     mesh_ctx: MeshCtx = MeshCtx(),
+    rng: Optional[jnp.ndarray] = None,  # per-layer key for dropout-style regularizers
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], jnp.ndarray, Dict]:
     """Returns (x, new_router_state, aux_loss, metrics)."""
+    del rng  # no stochastic regularizer uses it yet; plumbed for them
     aux = jnp.zeros((), jnp.float32)
     mets: Dict[str, jnp.ndarray] = {}
     b, s, d = x.shape
@@ -144,6 +147,7 @@ def apply_layer(
             cfg,
             layer_kind=base_kind,
             positions=positions,
+            segments=segments,
             mesh_ctx=mesh_ctx,
         )
         x = x + _maybe_post(p, "post_attn_norm", h, cfg)
@@ -190,6 +194,7 @@ def apply_layer(
             cfg,
             layer_kind="global",
             positions=positions,
+            segments=segments,
             mesh_ctx=mesh_ctx,
         )
         x = x + h
@@ -291,18 +296,25 @@ def apply_stack(
     cfg: ModelConfig,
     *,
     positions: Optional[jnp.ndarray] = None,
+    segments: Optional[jnp.ndarray] = None,
     enc_out: Optional[jnp.ndarray] = None,
     mesh_ctx: MeshCtx = MeshCtx(),
+    rng: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, list, jnp.ndarray, Dict]:
     """Run all layers. Returns (x, new_router_states, aux_total, metrics).
 
     metrics['max_vio_per_layer']: (n_moe_layers,) in layer order.
+
+    `rng` (optional) is the caller's per-step PRNG key; each layer receives
+    a fold of it (group index threaded through the scan, position folded
+    inside), so dropout-style regularizers get resume-stable randomness.
+    `segments` masks attention to within-document (packed real-text data).
     """
     period, n_groups, remainder = _group_layout(cfg)
     kinds = cfg.layer_kinds()
     shared = params.get("shared")
 
-    def period_body(x, layer_params, layer_states):
+    def period_body(x, layer_params, layer_states, group_rng=None):
         """Apply positions j = 0..period-1 once; returns per-j aux/mets."""
         x = mesh_ctx.constrain(x, mesh_ctx.batch_spec, None, None)
         new_states, auxes, vios = [], [], []
@@ -315,9 +327,11 @@ def apply_stack(
                 kinds[j][1],
                 layer_states[j],
                 positions=positions,
+                segments=segments,
                 enc_out=enc_out,
                 shared_params=shared,
                 mesh_ctx=mesh_ctx,
+                rng=None if group_rng is None else jax.random.fold_in(group_rng, j),
             )
             new_states.append(st)
             auxes.append(aux)
@@ -343,14 +357,20 @@ def apply_stack(
             # O(n_layers · tokens · d) to O(period · tokens · d) + residuals
             body_fn = jax.checkpoint(period_body)
 
+        group_keys = (
+            None if rng is None else jax.random.split(jax.random.fold_in(rng, 0), n_groups)
+        )
+
         def scan_body(x, per_group):
-            lp, ls = per_group
-            x, new_states, aux, vio = body_fn(x, lp, ls)
+            lp, ls = per_group[0], per_group[1]
+            gk = per_group[2] if group_keys is not None else None
+            x, new_states, aux, vio = body_fn(x, lp, ls, gk)
             return x, (new_states, aux, vio)
 
-        x, (scanned_states, auxes, vios) = lax.scan(
-            scan_body, x, (full_params, full_states)
-        )
+        xs = (full_params, full_states)
+        if group_keys is not None:
+            xs = xs + (group_keys,)
+        x, (scanned_states, auxes, vios) = lax.scan(scan_body, x, xs)
         aux_total = jnp.sum(auxes)
         vio_groups = vios  # (n_groups, n_moe_in_period)
     else:
@@ -372,6 +392,7 @@ def apply_stack(
             else jax.tree.map(lambda a: a[n_groups], router_states[j])
             for j in range(remainder)
         ]
+        rem_rng = None if rng is None else jax.random.fold_in(rng, 1)
         for j in range(remainder):
             x, st, aux, mets = apply_layer(
                 lp[j],
@@ -381,9 +402,11 @@ def apply_stack(
                 kinds[j][1],
                 ls[j],
                 positions=positions,
+                segments=segments,
                 enc_out=enc_out,
                 shared_params=shared,
                 mesh_ctx=mesh_ctx,
+                rng=None if rem_rng is None else jax.random.fold_in(rem_rng, j),
             )
             rem_states.append(st)
             aux_total = aux_total + aux

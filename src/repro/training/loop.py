@@ -95,17 +95,24 @@ def make_train_step(
     lr_fn: Callable[[jnp.ndarray], jnp.ndarray],
     *,
     microbatches: int = 1,
+    rng: Optional[jnp.ndarray] = None,
 ):
     """Returns train_step(state, batch) -> (state, metrics). Pure; jit-ready.
 
     With microbatches=k the batch's leading axis must divide by k; the
     forward/backward runs as a k-trip lax.scan with gradient accumulation so
     the residual/activation footprint is that of B/k sequences.
+
+    `rng` (optional) is a base PRNG key; each step derives its key by
+    folding in the optimizer's step counter (and the microbatch index under
+    accumulation), so the per-step randomness seen by dropout-style
+    regularizers is a pure function of checkpointed state — resume-stable
+    by construction.
     """
 
-    def _fwd_bwd(params, batch, router):
+    def _fwd_bwd(params, batch, router, key):
         return jax.value_and_grad(model.loss_fn, has_aux=True)(
-            params, batch, router
+            params, batch, router, key
         )
 
     def _apply(state: TrainState, grads, new_router, mets):
@@ -121,9 +128,12 @@ def make_train_step(
         )
 
     def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        step_key = (
+            None if rng is None else jax.random.fold_in(rng, state.opt_state["step"])
+        )
         if microbatches <= 1:
             (loss, (new_router, mets)), grads = _fwd_bwd(
-                state.params, batch, state.router_states
+                state.params, batch, state.router_states, step_key
             )
             mets = dict(mets)
             mets["loss"] = loss
@@ -135,9 +145,11 @@ def make_train_step(
         # benefit at <=16 microbatches
         acc_dt = model.cfg.param_dtype
 
-        def body(carry, one):
+        def body(carry, inp):
+            one, mb_idx = inp
             grads_acc, router = carry
-            (loss, (router, mets)), grads = _fwd_bwd(state.params, one, router)
+            key = None if step_key is None else jax.random.fold_in(step_key, mb_idx)
+            (loss, (router, mets)), grads = _fwd_bwd(state.params, one, router, key)
             grads_acc = jax.tree.map(
                 lambda a, g: a + g.astype(acc_dt), grads_acc, grads
             )
@@ -147,7 +159,7 @@ def make_train_step(
 
         zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), state.params)
         (grads, new_router), mets = jax.lax.scan(
-            body, (zero, state.router_states), mb
+            body, (zero, state.router_states), (mb, jnp.arange(microbatches))
         )
         grads = jax.tree.map(lambda g: g / microbatches, grads)
         return _apply(state, grads, new_router, _reduce_micro_mets(mets))
@@ -167,6 +179,7 @@ def compile_train_step(
     donate: bool = True,
     st_specs=None,
     b_specs=None,
+    rng: Optional[jnp.ndarray] = None,
 ):
     """jit the train step, with explicit shardings when a mesh is given.
 
@@ -179,7 +192,7 @@ def compile_train_step(
     train_loop, which also places the arrays with them) pass st_specs /
     b_specs so there is one resolution per run.
     """
-    step = make_train_step(model, opt_cfg, lr_fn, microbatches=microbatches)
+    step = make_train_step(model, opt_cfg, lr_fn, microbatches=microbatches, rng=rng)
     donate_argnums = (0,) if donate else ()
     if mesh is None:
         return jax.jit(step, donate_argnums=donate_argnums)
@@ -261,14 +274,28 @@ def train_loop(
     ckpt_dir: Optional[str] = None,
     ckpt_every: int = 0,
     resume: bool = False,
+    async_ckpt: bool = True,
 ) -> Tuple[TrainState, TrainLog]:
     """Host driver. With `mesh` the state/batches are placed with the specs
     from `distributed.sharding` and the step compiles with explicit
     shardings + donation; without one it is the plain single-device jit.
 
+    `batches` is any iterable of batch dicts; when it is a `BatchStream`
+    (has state_dict/load_state_dict — `data.ShardedTextLoader`,
+    `data.SyntheticBatchStream`, or a `data.Prefetcher` around either),
+    its cursor is checkpointed alongside the TrainState and `resume=True`
+    seeks it in O(1) instead of regenerating + discarding the consumed
+    prefix. Plain iterables keep the replay-skip fallback.
+
+    Checkpoints are written asynchronously by default (`async_ckpt=True`):
+    the save snapshots device buffers and overlaps the host gather + npz
+    write with the next steps, barriering at the following save
+    (checkpoint/store.py). Iteration stops at `total_steps` even when the
+    stream is infinite (real-corpus loaders loop epochs forever).
+
     `resume=True` restores the newest checkpoint under `ckpt_dir` (if any)
-    and skips the already-consumed prefix of the deterministic batch stream,
-    continuing bit-exactly — including the router duals q.
+    and continues bit-exactly — including the router duals q and the data
+    cursor.
     """
     from repro.optim.schedules import linear_warmup_cosine
 
@@ -281,14 +308,22 @@ def train_loop(
 
         manager = CheckpointManager(ckpt_dir)
 
+    is_stream = hasattr(batches, "state_dict") and hasattr(batches, "load_state_dict")
     start_step = 0
+    data_state = None
     if resume and manager is not None and state is None:
         from repro.checkpoint.store import latest_step
 
         if latest_step(ckpt_dir) is not None:
             start_step, state = manager.restore_train_state()
+            data_state = manager.restore_data_state(start_step)
     if state is None:
         state = init_train_state(model, key, opt_cfg)
+
+    loop_start = 0  # index the enumerate starts at
+    if is_stream and data_state is not None:
+        batches.load_state_dict(data_state)  # O(1) seek past the consumed prefix
+        loop_start = start_step
 
     st_specs = b_specs = None
     if mesh is not None:
@@ -304,10 +339,22 @@ def train_loop(
     step_fn = None
     log = TrainLog()
     mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
-    i = saved_at = -1
-    for i, batch in enumerate(batches):
+    saved_at = -1
+    it = iter(batches)
+    i = loop_start - 1
+    while True:
+        # bound infinite streams (epoch-looping corpus loaders) *before*
+        # pulling: the stream cursor must stay in sync with the step count,
+        # so never consume a batch that won't be trained on
+        if total_steps and i + 1 >= total_steps:
+            break
+        try:
+            batch = next(it)
+        except StopIteration:
+            break
+        i += 1
         if i < start_step:
-            continue  # resumed: this prefix of the stream is already consumed
+            continue  # resumed plain iterable: replay-skip the consumed prefix
         if mesh is not None:
             if b_specs is None:
                 b_all = batch_specs(model.cfg, mesh, jax.tree.leaves(batch)[0].shape[0])
@@ -325,6 +372,7 @@ def train_loop(
                 donate=donate,
                 st_specs=st_specs,
                 b_specs=b_specs,
+                rng=jax.random.fold_in(key, 0x5eed),
             )
         t0 = time.perf_counter()
         with mesh_ctx:
@@ -341,10 +389,22 @@ def train_loop(
                 )
             )
         if manager is not None and ckpt_every and (i + 1) % ckpt_every == 0:
-            manager.save_train_state(state)
+            manager.save_train_state(
+                state,
+                data_state=batches.state_dict() if is_stream else None,
+                block=not async_ckpt,
+            )
             saved_at = i
     if manager is not None and ckpt_every and saved_at != i:
-        manager.save_train_state(state)  # final state, off-boundary stop
+        manager.save_train_state(  # final state, off-boundary stop
+            state,
+            data_state=batches.state_dict() if is_stream else None,
+            block=not async_ckpt,
+        )
+    if manager is not None:
+        manager.wait()  # checkpoints durable before the loop returns
+    if hasattr(batches, "close"):
+        batches.close()  # stop a Prefetcher's producer on early break
     return state, log
 
 

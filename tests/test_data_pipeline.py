@@ -1,0 +1,431 @@
+"""Streaming data pipeline: tokenizer, packing, loader, prefetch, resume.
+
+Covers the DESIGN.md §Data invariants:
+  * tokenizer: lossless byte-level roundtrip, save/load stability
+  * packing: no token loss in 'pack' mode (every stream token is a label
+    exactly once), EOS boundaries, pad/nocross label masking, segment ids
+  * loader: deterministic per (shards, seed); rank striding partitions the
+    corpus exactly; mid-shard cursor checkpoint/restore is bit-exact
+  * prefetcher: transparent (same batches), resumable, drains cleanly on
+    early stop
+  * train_loop: real-pipeline resume reproduces the uninterrupted loss /
+    MaxVio trajectory bit-exactly (async checkpointing on), O(1) synthetic
+    resume, segment-masked attention equals per-document attention
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.loader import BatchStream, ShardedTextLoader, resolve_shards
+from repro.data.packing import SequencePacker, examples_to_batch
+from repro.data.prefetch import Prefetcher
+from repro.data.tokenizer import ByteBPETokenizer, iter_corpus_texts
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures", "corpus")
+
+
+@pytest.fixture(scope="module")
+def shards():
+    return resolve_shards(FIXTURE)
+
+
+@pytest.fixture(scope="module")
+def tok(shards):
+    return ByteBPETokenizer.train(iter_corpus_texts(shards), vocab_size=512)
+
+
+# ------------------------------------------------------------- tokenizer
+
+
+def test_tokenizer_roundtrip_and_serialization(shards, tok, tmp_path):
+    texts = list(iter_corpus_texts(shards))
+    assert len(texts) == 180
+    for t in texts[:40] + ["", "  spaces  ", "ünïcode — 测试 🙂"]:
+        ids = tok.encode(t)
+        assert all(0 <= i < tok.vocab_size for i in ids)
+        assert tok.decode(ids) == t
+    # compression: merges actually fire on in-domain text
+    raw = sum(len(t.encode("utf-8")) for t in texts)
+    enc = sum(len(tok.encode(t)) for t in texts)
+    assert enc < 0.8 * raw
+    path = str(tmp_path / "tok.json")
+    tok.save(path)
+    tok2 = ByteBPETokenizer.load(path)
+    assert tok2.vocab_size == tok.vocab_size and tok2.eos_id == tok.eos_id
+    assert tok2.encode(texts[0]) == tok.encode(texts[0])
+
+
+# --------------------------------------------------------------- packing
+
+
+def _docs(rng, n, lo=3, hi=40):
+    return [list(rng.integers(0, 500, size=rng.integers(lo, hi))) for _ in range(n)]
+
+
+def test_pack_no_token_loss_and_eos_boundaries():
+    rng = np.random.default_rng(0)
+    docs = _docs(rng, 23)
+    L, EOS = 16, 511
+    p = SequencePacker(L, EOS, "pack")
+    exs = [e for d in docs for e in p.add_document(d)] + p.flush()
+    # label multiset == stream (minus its first token): windows overlap by
+    # exactly 1, so every stream token is predicted exactly once
+    stream = [t for d in docs for t in list(d) + [EOS]]
+    labels = np.concatenate([e["window"][1:][e["valid"]] for e in exs])
+    assert labels.tolist() == stream[1 : 1 + len(labels)]
+    assert len(stream) - len(labels) <= L + 1  # only the tail can pad/drop
+    # every document boundary is an EOS in some window
+    assert sum(int((e["window"] == EOS).sum()) for e in exs) >= len(docs) - 1
+
+
+def test_pack_nocross_segments_and_boundary_masking():
+    rng = np.random.default_rng(1)
+    docs = _docs(rng, 8, lo=4, hi=12)
+    L, EOS = 10, 511
+    p = SequencePacker(L, EOS, "pack_nocross")
+    exs = [e for d in docs for e in p.add_document(d)] + p.flush()
+    for e in exs:
+        seg = e["segments"]
+        assert np.all(np.diff(seg[seg >= 0]) >= 0)  # monotone within window
+        # labels crossing a boundary are masked, within-doc labels are not
+        crosses = seg[1:] != seg[:-1]
+        assert not np.any(e["valid"] & crosses)
+    batch = examples_to_batch(exs[:4])
+    assert "segments" in batch and batch["segments"].shape == batch["tokens"].shape
+    assert np.all(batch["labels"][batch["labels"] >= 0] < 512)
+
+
+def test_pad_mode_one_doc_per_row():
+    EOS = 99
+    p = SequencePacker(8, EOS, "pad")
+    short = p.add_document([1, 2, 3])[0]
+    assert short["window"].tolist() == [1, 2, 3, EOS, EOS, EOS, EOS, EOS, EOS]
+    assert short["valid"].tolist() == [True, True, True] + [False] * 5
+    long = p.add_document(list(range(1, 20)))[0]
+    assert long["window"].tolist() == list(range(1, 10))  # truncated
+    assert bool(long["valid"].all())
+
+
+def test_packer_state_roundtrip():
+    rng = np.random.default_rng(2)
+    p1 = SequencePacker(12, 511, "pack_nocross")
+    p1.add_document(list(rng.integers(0, 500, 30)))
+    p2 = SequencePacker(12, 511, "pack_nocross")
+    p2.load_state_dict(json.loads(json.dumps(p1.state_dict())))
+    d = list(rng.integers(0, 500, 25))
+    for a, b in zip(p1.add_document(list(d)), p2.add_document(list(d))):
+        assert np.array_equal(a["window"], b["window"])
+        assert np.array_equal(a["segments"], b["segments"])
+
+
+# ---------------------------------------------------------------- loader
+
+
+def test_loader_deterministic(shards, tok):
+    mk = lambda: ShardedTextLoader(shards, tok, batch_size=4, seq_len=32, seed=5)
+    for a, b in itertools.islice(zip(iter(mk()), iter(mk())), 8):
+        for k in a:
+            assert np.array_equal(a[k], b[k])
+
+
+def test_loader_rank_striding_partitions_corpus(shards, tok):
+    def rank_docs(rank, world):
+        l = ShardedTextLoader(
+            shards, tok, batch_size=1, seq_len=8, rank=rank, world_size=world,
+            epochs=1, seed=0,
+        )
+        docs = []
+        while (d := l._next_rank_doc()) is not None:
+            docs.append(tuple(d))
+        return docs
+
+    all_docs = rank_docs(0, 1)
+    assert len(all_docs) == 180
+    for world in (2, 3):
+        parts = [rank_docs(r, world) for r in range(world)]
+        assert sorted(itertools.chain(*parts)) == sorted(all_docs)
+        sizes = [len(p) for p in parts]
+        assert max(sizes) - min(sizes) <= 1  # even split
+        flat = set(itertools.chain(*(map(tuple, p) for p in parts)))
+        # disjoint up to duplicate documents in the corpus
+        assert len(flat) == len(set(map(tuple, all_docs)))
+
+
+@pytest.mark.parametrize("mode", ["pack", "pack_nocross"])
+def test_loader_cursor_resume_mid_shard_bit_exact(shards, tok, mode):
+    mk = lambda seed: ShardedTextLoader(
+        shards, tok, batch_size=4, seq_len=32, pack_mode=mode,
+        shuffle_buffer=16, seed=seed,
+    )
+    l1 = mk(9)
+    it1 = iter(l1)
+    for _ in range(5):
+        next(it1)
+    snap = json.loads(json.dumps(l1.state_dict()))  # sidecar JSON roundtrip
+    assert 0 < snap["file_idx"] or snap["byte_offset"] > 0  # genuinely mid-shard
+    ref = [next(it1) for _ in range(7)]
+    l2 = mk(12345)  # ctor seed must not matter after restore
+    l2.load_state_dict(snap)
+    for r, x in zip(ref, iter(l2)):
+        for k in r:
+            assert np.array_equal(r[k], x[k])
+
+
+def test_loader_epochs_reshuffle(shards, tok):
+    l = ShardedTextLoader(shards, tok, batch_size=4, seq_len=64, seed=0)
+    first = [next(iter(l)) for _ in range(1)][0]
+    n_epoch0 = None
+    it = iter(l)
+    for _ in range(200):
+        next(it)
+        if l._epoch >= 1 and n_epoch0 is None:
+            n_epoch0 = l._batches_emitted
+            break
+    assert l._epoch >= 1  # looped into a second epoch
+    assert first["tokens"].shape == (4, 64)
+
+
+# ------------------------------------------------------------- prefetcher
+
+
+def test_prefetcher_transparent_and_resumable(shards, tok):
+    mk = lambda: ShardedTextLoader(shards, tok, batch_size=4, seq_len=32, seed=3)
+    raw = list(itertools.islice(iter(mk()), 10))
+    pf = Prefetcher(mk(), depth=2)
+    got = list(itertools.islice(iter(pf), 10))
+    pf.close()
+    for a, b in zip(raw, got):
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    # resume from the prefetcher's cursor: it must reflect CONSUMED batches
+    # only, not the producer's read-ahead
+    pf1 = Prefetcher(mk(), depth=2)
+    it = iter(pf1)
+    for _ in range(4):
+        next(it)
+    snap = json.loads(json.dumps(pf1.state_dict()))
+    pf1.close()
+    l2 = mk()
+    l2.load_state_dict(snap)
+    nxt = next(iter(l2))
+    for k in nxt:
+        assert np.array_equal(np.asarray(raw[4][k]), np.asarray(nxt[k]))
+
+
+def test_prefetcher_drains_cleanly_on_early_stop(shards, tok):
+    import threading
+
+    before = threading.active_count()
+    pf = Prefetcher(
+        ShardedTextLoader(shards, tok, batch_size=4, seq_len=32, seed=0), depth=2
+    )
+    for i, _ in enumerate(iter(pf)):
+        if i == 2:
+            break  # early stop mid-stream
+    pf.close()
+    assert pf._thread is None
+    assert threading.active_count() == before
+    # double-close is a no-op
+    pf.close()
+
+
+def test_prefetcher_propagates_producer_errors():
+    class Boom:
+        def __iter__(self):
+            yield {"tokens": np.zeros((1, 4), np.int32)}
+            raise RuntimeError("shard corrupted")
+
+        def state_dict(self):
+            return {}
+
+        def load_state_dict(self, s):
+            pass
+
+    pf = Prefetcher(Boom(), depth=2, device_put=False)
+    it = iter(pf)
+    next(it)
+    with pytest.raises(RuntimeError, match="shard corrupted"):
+        next(it)
+
+
+# ------------------------------------------------- end-to-end train/resume
+
+
+def _tiny_model():
+    import repro.configs as configs
+    from repro.models import build_model
+
+    cfg = configs.reduced_for_smoke(
+        "minimind_moe_16e", n_layers=2, d_model=64, d_ff=128, moe_d_ff=64
+    )
+    return cfg, build_model(cfg)
+
+
+def test_train_resume_real_pipeline_bit_exact(shards, tok, tmp_path):
+    import jax
+
+    from repro.training import train_loop
+
+    cfg, model = _tiny_model()
+    mk = lambda: Prefetcher(
+        ShardedTextLoader(shards, tok, batch_size=4, seq_len=32,
+                          pack_mode="pack", seed=0),
+        depth=2,
+    )
+    _, ref = train_loop(model, mk(), key=jax.random.PRNGKey(0), total_steps=6)
+    d = str(tmp_path / "ck")
+    train_loop(model, mk(), key=jax.random.PRNGKey(0), total_steps=3,
+               ckpt_dir=d, ckpt_every=3)
+    assert os.path.exists(os.path.join(d, "step_3.data.json"))
+    st, log = train_loop(model, mk(), key=jax.random.PRNGKey(0), total_steps=6,
+                         ckpt_dir=d, ckpt_every=100, resume=True)
+    assert log.losses == ref.losses[3:]  # bit-exact continuation
+    assert [v.tolist() for v in log.max_vio_steps] == [
+        v.tolist() for v in ref.max_vio_steps[3:]
+    ]
+
+
+def test_train_resume_synthetic_stream_o1(tmp_path):
+    import jax
+
+    from repro.data.synthetic import SyntheticBatchStream, make_batches
+    from repro.training import train_loop
+
+    cfg, model = _tiny_model()
+    mk = lambda: SyntheticBatchStream(cfg, 4, 32, 6, seed=0)
+    # stream == generator batches
+    for a, b in zip(iter(mk()), make_batches(cfg, 4, 32, 6, seed=0)):
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    _, ref = train_loop(model, mk(), key=jax.random.PRNGKey(1), total_steps=6)
+    d = str(tmp_path / "ck")
+    train_loop(model, mk(), key=jax.random.PRNGKey(1), total_steps=3,
+               ckpt_dir=d, ckpt_every=3)
+    s = mk()
+    _, log = train_loop(model, s, key=jax.random.PRNGKey(1), total_steps=6,
+                        ckpt_dir=d, ckpt_every=100, resume=True)
+    assert log.losses == ref.losses[3:]
+    # O(1): the stream was seeked, not replayed from 0
+    assert s.state_dict()["step"] == 6
+
+
+def test_async_checkpoint_matches_blocking(shards, tok, tmp_path):
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.training import train_loop
+
+    cfg, model = _tiny_model()
+    mk = lambda: ShardedTextLoader(shards, tok, batch_size=4, seq_len=32, seed=1)
+    da, db = str(tmp_path / "async"), str(tmp_path / "block")
+    train_loop(model, mk(), key=jax.random.PRNGKey(2), total_steps=4,
+               ckpt_dir=da, ckpt_every=2, async_ckpt=True)
+    train_loop(model, mk(), key=jax.random.PRNGKey(2), total_steps=4,
+               ckpt_dir=db, ckpt_every=2, async_ckpt=False)
+    sa, ta = CheckpointManager(da).restore_train_state()
+    sb, tb = CheckpointManager(db).restore_train_state()
+    assert sa == sb == 4
+    for a, b in zip(jax.tree.leaves(ta.params), jax.tree.leaves(tb.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert CheckpointManager(da).restore_data_state() == CheckpointManager(
+        db
+    ).restore_data_state()
+
+
+def test_segment_mask_equals_per_document_attention():
+    """'pack_nocross' attention isolates documents (dense trunk: MoE expert
+    capacity is contested across the whole batch, so routers couple tokens
+    across documents by design — attention is what segments must cut)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as configs
+    from repro.configs.base import RoutingSpec
+    from repro.models import build_model
+
+    cfg, _ = _tiny_model()
+    cfg = dataclasses.replace(cfg, family="dense", routing=RoutingSpec())
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    rs = model.init_router_states()
+    S = 24
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab_size))
+    cut = 10
+    seg = np.zeros((1, S), np.int32)
+    seg[:, cut:] = 1
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks),
+             "segments": jnp.asarray(seg)}
+    logits, *_ = model.forward(params, batch, rs)
+    # each document alone (positions restart per doc in the packed batch's
+    # RoPE? no — packed positions are absolute; mimic by slicing positions
+    # is not possible via public API, so compare against a batch where the
+    # second document is replaced: logits of doc0 must not change)
+    toks2 = toks.copy()
+    toks2[:, cut:] = (toks2[:, cut:] + 7) % cfg.vocab_size
+    batch2 = {"tokens": jnp.asarray(toks2), "labels": jnp.asarray(toks2),
+              "segments": jnp.asarray(seg)}
+    logits2, *_ = model.forward(params, batch2, rs)
+    np.testing.assert_allclose(
+        np.asarray(logits[0, :cut]), np.asarray(logits2[0, :cut]), rtol=0, atol=0
+    )
+    # and WITHOUT segments, changing doc1 does leak into... nothing before
+    # the cut (causality) — but changing doc0 leaks into doc1 only when
+    # segments are absent
+    toks3 = toks.copy()
+    toks3[:, :cut] = (toks3[:, :cut] + 7) % cfg.vocab_size
+    b_seg = {"tokens": jnp.asarray(toks3), "labels": jnp.asarray(toks3),
+             "segments": jnp.asarray(seg)}
+    b_noseg = {"tokens": jnp.asarray(toks3), "labels": jnp.asarray(toks3)}
+    l_seg, *_ = model.forward(params, b_seg, rs)
+    l_noseg, *_ = model.forward(params, b_noseg, rs)
+    ref_tail, *_ = model.forward(params, batch, rs)
+    # with segments: doc1 logits identical to the original batch's doc1
+    np.testing.assert_array_equal(
+        np.asarray(l_seg[0, cut:]), np.asarray(ref_tail[0, cut:])
+    )
+    # without segments: doc0's change must reach doc1 (causal attention)
+    assert not np.array_equal(np.asarray(l_noseg[0, cut:]), np.asarray(ref_tail[0, cut:]))
+
+
+def test_segments_refused_on_ssm_family():
+    """The SSM recurrence leaks across packed documents — model.forward
+    must refuse segments rather than silently train on the leak."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as configs
+    from repro.models import build_model
+
+    cfg = configs.reduced_for_smoke("mamba2_130m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 8), jnp.int32)
+    batch = {"tokens": toks, "labels": toks, "segments": jnp.zeros((1, 8), jnp.int32)}
+    with pytest.raises(ValueError, match="pack_nocross"):
+        model.forward(params, batch, model.init_router_states())
+
+
+def test_launcher_data_cli(tmp_path):
+    """launch.train --data end to end, incl. tokenizer train+save."""
+    from repro.launch.train import main
+
+    out = str(tmp_path / "s.json")
+    rc = main([
+        "--arch", "minimind-moe-16e", "--reduced", "--steps", "2",
+        "--batch", "2", "--seq-len", "32", "--data", FIXTURE,
+        "--tokenizer", str(tmp_path / "tok.json"), "--log-every", "0",
+        "--out-json", out,
+    ])
+    assert rc == 0
+    with open(out) as f:
+        summary = json.load(f)
+    assert summary["data"] == FIXTURE and summary["final_loss"] is not None
+    assert os.path.exists(str(tmp_path / "tok.json"))
