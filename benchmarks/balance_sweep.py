@@ -33,6 +33,16 @@ the SAME shuffled+packed document stream — real corpora are where routing
 skew actually bites (the synthetic stream's near-uniform statistics
 understate it), so this is the claim-bearing mode for the paper's
 balance-on-real-data story.
+
+``--sync local|global|both`` switches to the CROSS-SHARD lens (DESIGN.md
+§Global-sync): BIP trains on a ``--mesh DxM`` host mesh (force host
+devices first, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)
+under the requested dual-sync mode(s), next to an unsharded single-device
+reference on the same stream. sync='global' must reproduce the
+single-device MaxVio trajectory (psum'd duals == paper duals); sync='local'
+solves per-shard BIPs and drifts — that contrast is the sharded
+counterpart of the committed BENCH_balance_sweep.json table, and it lands
+in BENCH_balance_sweep_sync.json with every entry's sync/mesh recorded.
 """
 from __future__ import annotations
 
@@ -89,6 +99,8 @@ def _run_method(
     data: str = None,
     tokenizer_path: str = None,
     pack_mode: str = "pack",
+    sync: str = None,
+    mesh_shape: tuple = None,
 ) -> Dict[str, Any]:
     import jax
     import numpy as np
@@ -98,9 +110,25 @@ def _run_method(
     from repro.training import train_loop
 
     cfg = dataclasses.replace(
-        cfg, routing=dataclasses.replace(cfg.routing, strategy=method)
+        cfg,
+        routing=dataclasses.replace(
+            cfg.routing, strategy=method, sync=sync or cfg.routing.sync
+        ),
     )
-    model = build_model(cfg)
+    mesh = None
+    if mesh_shape is not None:
+        from repro.distributed import make_mesh_ctx
+        from repro.launch.mesh import make_host_mesh
+
+        assert len(jax.devices()) >= mesh_shape[0] * mesh_shape[1], (
+            f"mesh {mesh_shape} needs {mesh_shape[0] * mesh_shape[1]} devices, "
+            f"have {len(jax.devices())} — set XLA_FLAGS=--xla_force_host_"
+            f"platform_device_count=N (or run on real accelerators)"
+        )
+        mesh = make_host_mesh(*mesh_shape)
+        model = build_model(cfg, make_mesh_ctx(mesh))
+    else:
+        model = build_model(cfg)
     if data:
         from repro.data import Prefetcher, ShardedTextLoader, resolve_shards
 
@@ -122,11 +150,24 @@ def _run_method(
         lr=lr,
         warmup_steps=max(steps // 10, 1),
         total_steps=steps,
+        mesh=mesh,
     )
     wall = time.perf_counter() - t0
     vio = np.stack(log.max_vio_steps) if log.max_vio_steps else np.zeros((0, 0))
     return {
         "strategy": method,
+        # sync/mesh recorded per entry so trajectories are unambiguous:
+        # single-device runs compute paper-global duals whatever cfg says,
+        # but sync='global' still selects the threshold solver (the sync
+        # sweep's reference runs it so the contrast is solver-for-solver)
+        "sync": cfg.routing.sync
+        if mesh is not None
+        else (
+            "n/a (single device, threshold solver: sync='global')"
+            if cfg.routing.sync == "global"
+            else "n/a (single device)"
+        ),
+        "mesh": list(mesh_shape) if mesh_shape is not None else None,
         "max_vio_per_step": [[round(float(v), 5) for v in row] for row in vio],
         "ppl_per_step": [round(p, 3) for p in log.perplexities],
         "step_time_s": [round(t, 5) for t in log.step_times],
@@ -143,13 +184,27 @@ def run(
     data: str = None,
     tokenizer_path: str = None,
     pack_mode: str = "pack",
+    sync: str = None,
+    mesh: tuple = None,
 ) -> List[Dict[str, Any]]:
     """Returns CSV rows; writes BENCH_balance_sweep.json as a side effect
-    (BENCH_balance_sweep_data.json in --data mode, so the synthetic table
-    isn't clobbered)."""
+    (BENCH_balance_sweep_data.json in --data mode, BENCH_balance_sweep_sync
+    .json in --sync mode, so the single-device table isn't clobbered).
+
+    --sync mode sweeps BIP's cross-shard dual-sync axis instead of the
+    method axis: an unsharded single-device run (the paper trajectory) next
+    to `--mesh` runs under the requested sync mode(s). Everything shares
+    one init + token stream, so trajectory differences are purely the dual
+    semantics: 'global' must track the single-device MaxVio curve, 'local'
+    legitimately drifts (per-shard duals).
+    """
     import numpy as np
 
     steps = steps or (12 if smoke else 80)
+    sync_modes = (
+        None if sync is None else (["local", "global"] if sync == "both" else [sync])
+    )
+    mesh = tuple(mesh) if mesh else ((4, 2) if sync_modes else None)
     out: Dict[str, Any] = {
         "meta": {
             "batch": BATCH,
@@ -157,11 +212,19 @@ def run(
             "steps": steps,
             "data": data,
             "pack_mode": pack_mode if data else None,
+            "mesh": list(mesh) if sync_modes else None,
             "note": (
                 "reduced minimind-moe geometry at real expert counts; "
                 "identical init + token stream per method; MaxVio = "
                 "max_load/mean_load - 1 per MoE layer per batch"
                 + ("; real-text stream via data/ pipeline" if data else "")
+                + (
+                    "; cross-shard sync sweep: BIP on a DxM host mesh per "
+                    "sync mode vs the unsharded single-device reference"
+                    if sync_modes
+                    else "; single-device runs: duals span the full batch "
+                    "(paper-global) regardless of cfg sync"
+                )
             ),
         },
         "configs": {},
@@ -177,17 +240,30 @@ def run(
             "bip_iters": cfg.routing.bip_iters,
             "methods": {},
         }
-        for method in METHODS:
+        if sync_modes:
+            # the unsharded reference also runs sync='global' (mesh=None):
+            # route() then uses the same threshold/bisection solver as the
+            # mesh runs, so the trajectory contrast is solver-for-solver
+            # (DESIGN.md §Global-sync — the sort solver parks q exactly on
+            # the degenerate capacity-marginal tie)
+            variants = [("bip", "bip[single-device]", "global", None)] + [
+                ("bip", f"bip[sync={sm}]", sm, mesh) for sm in sync_modes
+            ]
+        else:
+            variants = [(m, m, None, None) for m in METHODS]
+        for method, label, sm, msh in variants:
             rec = _run_method(
                 cfg, method, steps, lr=1e-3,
                 data=data, tokenizer_path=tokenizer_path, pack_mode=pack_mode,
+                sync=sm, mesh_shape=msh,
             )
-            entry["methods"][method] = rec
+            entry["methods"][label] = rec
             step_s = rec["mean_step_time"] or float(np.mean(rec["step_time_s"]))
-            suffix = "_data" if data else ""
+            # suffix mirrors the output file: sync wins over data
+            suffix = "_sync" if sync_modes else ("_data" if data else "")
             rows.append(
                 {
-                    "name": f"balance_sweep_{cfg.name}_{method}{suffix}",
+                    "name": f"balance_sweep_{cfg.name}_{label}{suffix}",
                     "us_per_call": round(step_s * 1e6, 1),
                     "derived": (
                         f"AvgMaxVio={rec['AvgMaxVio']:.4f};"
@@ -198,7 +274,7 @@ def run(
                 }
             )
             print(
-                f"  {cfg.name} {method:9s} AvgMaxVio={rec['AvgMaxVio']:.4f} "
+                f"  {cfg.name} {label:18s} AvgMaxVio={rec['AvgMaxVio']:.4f} "
                 f"step0={rec['first_step_max_vio']:.4f} "
                 f"ppl={rec['final_ppl']:.1f} "
                 f"step={step_s * 1e3:.1f}ms",
@@ -206,9 +282,12 @@ def run(
             )
         out["configs"][cfg.name] = entry
 
-    with open(
-        "BENCH_balance_sweep_data.json" if data else "BENCH_balance_sweep.json", "w"
-    ) as f:
+    fname = (
+        "BENCH_balance_sweep_sync.json"
+        if sync_modes
+        else ("BENCH_balance_sweep_data.json" if data else "BENCH_balance_sweep.json")
+    )
+    with open(fname, "w") as f:
         json.dump(out, f, indent=1)
     return rows
 
@@ -224,9 +303,24 @@ def main(argv=None) -> int:
                     help="tokenizer JSON (trained on --data if missing)")
     ap.add_argument("--pack-mode", default="pack",
                     choices=["pack", "pack_nocross", "pad"])
+    ap.add_argument("--sync", default=None, choices=["local", "global", "both"],
+                    help="cross-shard sweep: train BIP on --mesh under this "
+                         "dual-sync mode (plus a single-device reference) "
+                         "instead of sweeping methods; needs >= D*M host "
+                         "devices (XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 for the default 4x2)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="host mesh for --sync runs (default 4x2)")
     args = ap.parse_args(argv)
+    mesh = None
+    if args.mesh:
+        if not args.sync:
+            ap.error("--mesh only applies to --sync runs (the method sweep "
+                     "is single-device by design)")
+        mesh = tuple(int(v) for v in args.mesh.lower().split("x"))
     for r in run(smoke=args.smoke, steps=args.steps, data=args.data,
-                 tokenizer_path=args.tokenizer, pack_mode=args.pack_mode):
+                 tokenizer_path=args.tokenizer, pack_mode=args.pack_mode,
+                 sync=args.sync, mesh=mesh):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
     return 0
 

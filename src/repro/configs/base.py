@@ -26,7 +26,13 @@ class RoutingSpec:
     norm_topk_prob: bool = False
     score_fn: str = "softmax"
     capacity_factor: float = 1.25   # static capacity C = ceil(k·n/m · cf)
-    sync: str = "local"            # 'local' (per-shard duals) | 'global'
+    # BIP dual sync across data shards (DESIGN.md §Global-sync):
+    # 'local'  per-shard duals, pmean-averaged into the warm start — no
+    #          router collectives, balance guaranteed per shard only.
+    # 'global' psum'd threshold order statistics: every device converges on
+    #          the single-device duals over the global batch (~n_bisect
+    #          fused (m,)-psums per dual iteration).
+    sync: str = "local"
     use_kernel: bool = False       # Pallas ADMM kernel for the dual update
     # expert-parallel implementation (DESIGN.md §6 / EXPERIMENTS.md §Perf):
     # 'ep2d' gathers activations, weights stay (experts->model, f->data)

@@ -11,6 +11,8 @@ from repro.core.metrics import BalanceTracker, balance_metrics, expert_load, max
 from repro.core.online import OnlineBIPGate
 from repro.core.ref_bip import (
     bip_dual_update,
+    bip_dual_update_global,
+    bip_dual_update_masked,
     bip_dual_update_threshold,
     bip_route_reference,
     bip_topk,
@@ -28,6 +30,8 @@ __all__ = [
     "RouterOutput",
     "balance_metrics",
     "bip_dual_update",
+    "bip_dual_update_global",
+    "bip_dual_update_masked",
     "bip_dual_update_threshold",
     "bip_route_reference",
     "bip_topk",

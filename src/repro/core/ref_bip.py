@@ -181,43 +181,106 @@ def bip_dual_update_threshold(
     *,
     top_k: int,
     n_iters: int,
-    n_tokens_global: Optional[int] = None,
     axis_names: tuple = (),
     n_bisect: int = 26,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sort-free ADMM dual update; optionally global over sharded tokens.
 
-    With axis_names=() this matches `bip_dual_update` up to bisection
-    resolution. With axis_names set, `s` is the device-local (n_local, m)
-    shard and the expert-price step uses global counts, reproducing the
-    paper's single-device semantics under data parallelism.
+    Thin alias of `bip_dual_update_global` without a token mask, kept as
+    the historically-named entry point for the kernel/property parity
+    tests. With axis_names=() this matches `bip_dual_update` up to
+    bisection resolution; with axis_names set, `s` is the device-local
+    (n_local, m) shard and the expert-price step uses psum'd global
+    counts, reproducing the paper's single-device semantics under data
+    parallelism.
+    """
+    return bip_dual_update_global(
+        s, q0, top_k=top_k, n_iters=n_iters,
+        axis_names=axis_names, n_bisect=n_bisect,
+    )
+
+
+def bip_dual_update_global(
+    s: jnp.ndarray,
+    q0: jnp.ndarray,
+    *,
+    top_k: int,
+    n_iters: int,
+    token_mask: Optional[jnp.ndarray] = None,  # (n,) bool; False rows invisible
+    axis_names: tuple = (),
+    n_bisect: int = 26,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ADMM dual update over the union of real tokens across `axis_names`.
+
+    This is the sync='global' building block (DESIGN.md §Global-sync): `s`
+    is the device-local (n_local, m) score shard inside a shard_map over
+    the data axes, and every collective quantity — the real-token count,
+    the bisection bounds, and the per-threshold exceedance counts — is
+    reduced across `axis_names`, so every device converges on the SAME
+    dual vector q over the GLOBAL token batch while only ever holding its
+    shard. The token-price step p is row-wise over experts and stays fully
+    local. Collective cost: one fused (m,)-psum per bisection step plus a
+    pmin/pmax bound pair per dual iteration (~n_iters·(n_bisect+2) small
+    collectives), traded for the step-wise global balance guarantee.
+
+    `token_mask` marks real rows (serving padding is False): masked rows
+    are pushed to -1e30 so they sink out of every order statistic, and the
+    capacity index floor(n_real·k/m) is computed from the global real-row
+    count (traced — hence the threshold/bisection order statistic, whose
+    count comparison accepts a traced kth).
+
+    vma typing (shard_map check_vma): q0 enters replicated and the q carry
+    STAYS replicated — every q_new is assembled from psum/pmin/pmax
+    outputs — so callers can return it under an out_spec of P(None) with
+    no re-replicating pmean. The p carry inherits s's varying type.
+
+    With axis_names=() and an all-True (or absent) mask this matches
+    `bip_dual_update` up to bisection resolution (~6e-8).
     """
     n, m = s.shape
-    n_glob = n_tokens_global if n_tokens_global is not None else n
-    cap_idx = expert_kth_index(n_glob, top_k, m)
+    axis_names = tuple(axis_names)
+    if token_mask is None:
+        s_m = s
+        n_real = jnp.asarray(n, jnp.int32)
+    else:
+        # masked rows give max(0, -1e30) = 0: no token price, no count
+        s_m = jnp.where(token_mask[:, None], s, jnp.asarray(-1e30, s.dtype))
+        n_real = jnp.sum(token_mask).astype(jnp.int32)
+    n_glob = lax.psum(n_real, axis_names) if axis_names else n_real
+    cap_idx = (n_glob * top_k) // m  # traced counterpart of expert_kth_index
 
     def body(_, pq):
         q, _p = pq
-        # Row-wise (k+1)-th largest over m (m is small; per-token, local).
         if top_k >= m:
             p = jnp.zeros((n,), s.dtype)
         else:
-            p = jnp.maximum(0.0, kth_largest(s - q[None, :], top_k, axis=-1))
-        if cap_idx < 0:
-            q_new = jnp.zeros_like(q)
+            p = jnp.maximum(0.0, kth_largest(s_m - q[None, :], top_k, axis=-1))
+        x = s_m - p[:, None]
+        # bisection bounds from real entries only, else resolution dies
+        if token_mask is None:
+            lo = jnp.min(x, axis=0)
+            hi = jnp.max(x, axis=0)
         else:
-            q_new = jnp.maximum(
-                0.0,
-                kth_largest_threshold(
-                    s - p[:, None], cap_idx, axis=0,
-                    axis_names=axis_names, n_bisect=n_bisect,
-                ),
-            )
+            lo = jnp.min(jnp.where(token_mask[:, None], x, jnp.inf), axis=0)
+            hi = jnp.max(jnp.where(token_mask[:, None], x, -jnp.inf), axis=0)
+        if axis_names:
+            lo = lax.pmin(lo, axis_names)
+            hi = lax.pmax(hi, axis_names)
+        q_new = jnp.maximum(
+            0.0,
+            kth_largest_threshold(
+                x, cap_idx, axis=0,
+                axis_names=axis_names, n_bisect=n_bisect, lo=lo, hi=hi,
+            ),
+        )
+        # slack capacity (cap index past the global real rows) -> price 0
+        q_new = jnp.where(cap_idx >= jnp.maximum(n_glob, 1), 0.0, q_new)
         return (q_new, p)
 
     p0 = 0.0 * s[:, 0]  # inherit s's vma type (see bip_dual_update)
-    q_init = q0.astype(s.dtype) + 0.0 * s[0]
-    q, p = lax.fori_loop(0, n_iters, body, (q_init, p0))
+    q, p = lax.fori_loop(0, n_iters, body, (q0.astype(s.dtype), p0))
+    # an all-padding invocation (idle engine step) must not move the dual
+    q = jnp.where(n_glob > 0, q, q0.astype(s.dtype))
     return q, p
 
 
@@ -230,46 +293,15 @@ def bip_dual_update_masked(
     n_iters: int,
     n_bisect: int = 26,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """ADMM dual update computed over the REAL rows only.
+    """ADMM dual update over the REAL rows only (serving-chunk padding).
 
-    Serving chunks carry padding rows for static shapes (DESIGN.md
-    §Serving); at steady-state decode they can outnumber real tokens
-    many-to-one, so letting them into the dual update would drift q toward
-    balancing uniform filler instead of real traffic. Masked rows are
-    pushed to -inf so they sink out of every order statistic, and the
-    capacity index floor(n_real·k/m) becomes traced — hence the
-    threshold/bisection order statistic (its count comparison accepts a
-    traced kth) instead of the sort-based one. With an all-True mask this
-    matches `bip_dual_update` up to bisection resolution (~6e-8).
+    Single-device specialization of `bip_dual_update_global`: serving
+    chunks carry padding rows for static shapes (DESIGN.md §Serving); at
+    steady-state decode they can outnumber real tokens many-to-one, so
+    letting them into the dual update would drift q toward balancing
+    uniform filler instead of real traffic.
     """
-    n, m = s.shape
-    neg = jnp.asarray(-1e30, s.dtype)
-    n_real = jnp.sum(mask)
-    cap_idx = (n_real * top_k) // m  # traced counterpart of expert_kth_index
-    s_m = jnp.where(mask[:, None], s, neg)
-
-    def body(_, pq):
-        q, _p = pq
-        if top_k >= m:
-            p = jnp.zeros((n,), s.dtype)
-        else:
-            # masked rows give max(0, -inf) = 0: no token price
-            p = jnp.maximum(0.0, kth_largest(s_m - q[None, :], top_k, axis=-1))
-        x = s_m - p[:, None]
-        # bisection bounds from real entries only, else resolution dies
-        lo = jnp.min(jnp.where(mask[:, None], x, jnp.inf), axis=0)
-        hi = jnp.max(jnp.where(mask[:, None], x, -jnp.inf), axis=0)
-        q_new = jnp.maximum(
-            0.0,
-            kth_largest_threshold(x, cap_idx, axis=0, n_bisect=n_bisect, lo=lo, hi=hi),
-        )
-        # slack capacity (cap index past the real rows) -> price 0
-        q_new = jnp.where(cap_idx >= jnp.maximum(n_real, 1), 0.0, q_new)
-        return (q_new, p)
-
-    p0 = 0.0 * s[:, 0]
-    q_init = q0.astype(s.dtype) + 0.0 * s[0]
-    q, p = lax.fori_loop(0, n_iters, body, (q_init, p0))
-    # an all-padding invocation (idle engine step) must not move the dual
-    q = jnp.where(n_real > 0, q, q0.astype(s.dtype))
-    return q, p
+    return bip_dual_update_global(
+        s, q0, top_k=top_k, n_iters=n_iters,
+        token_mask=mask, axis_names=(), n_bisect=n_bisect,
+    )

@@ -14,13 +14,17 @@ receives gradient — only 'aux_loss' shapes gradients, via its explicit loss.
 The router is functional: `route(logits, state, cfg)` returns RouterOutput with
 the new state; the training loop threads state through like any other pytree.
 
-Distribution note (see DESIGN.md §3.3): under jit/pjit the math below is
-written over the *global* token batch, so sync='global' is simply the default
-program — XLA inserts the collectives for the column order statistic when
-tokens are sharded. sync='local' reshapes tokens into `local_shards`
-independent groups and vmaps the dual update, eliminating router collectives;
-with batch sharded over the data axes and local_shards == n_data_shards, each
-group's computation stays device-local.
+Distribution note (see DESIGN.md §3.3 / §Global-sync): under plain jit/pjit
+the math below is written over the *global* token batch, so single-program
+callers get paper-global duals for free — XLA inserts the collectives for the
+column order statistic when tokens are sharded. Inside a shard_map (the EP
+paths in models/moe.py) each device sees only its token shard, and
+cfg.sync selects the semantics: 'global' runs the threshold dual update with
+psum-reduced counts over cfg.data_axes (`ref_bip.bip_dual_update_global`) so
+every device converges on the same q over the global batch; 'local' solves a
+per-shard BIP and the caller averages the warm-start duals. sync='local' with
+`local_shards > 1` additionally lets a single-program caller emulate the
+per-shard semantics by vmapping the dual update over token groups.
 """
 from __future__ import annotations
 
@@ -226,11 +230,27 @@ def route(
     aux = jnp.zeros((), dtype=cfg.router_dtype)
     new_q = q0
 
+    # sync='global': the dual update runs with psum-reduced counts over the
+    # data axes, so q converges identically on every shard (DESIGN.md
+    # §Global-sync). Empty data_axes (single device, or a caller outside
+    # shard_map) degrades to the plain per-batch update.
+    global_axes = tuple(cfg.data_axes) if cfg.sync == "global" else ()
+
     if cfg.strategy == "bip":
-        if token_mask is not None:
-            q, _ = ref_bip.bip_dual_update_masked(
-                lax.stop_gradient(s), q0, token_mask,
+        if cfg.sync == "global" or token_mask is not None:
+            # one implementation serves the mesh path (axis_names), the
+            # serving path (token_mask), AND the unsharded sync='global'
+            # reference (axes=()): all three share the bisection numerics,
+            # so a sharded global-sync run reproduces the single-device
+            # trajectory bit-for-bit at the dual level — the sort-based
+            # update would instead park q exactly ON the capacity-marginal
+            # token's score and make the comparison tie-degenerate. The
+            # Pallas dual kernel has no collective form, so sync='global'
+            # always uses this reference implementation.
+            q, _ = ref_bip.bip_dual_update_global(
+                lax.stop_gradient(s), q0,
                 top_k=cfg.top_k, n_iters=cfg.bip_iters,
+                token_mask=token_mask, axis_names=global_axes,
             )
             corrected = s - q[None, :]
             new_q = q
@@ -258,6 +278,11 @@ def route(
         if token_mask is not None:
             onehot = onehot * token_mask.astype(cfg.router_dtype)[:, None, None]
         load = lax.stop_gradient(onehot.sum(axis=(0, 1)))
+        if global_axes:
+            # global sign update: every shard sees the same selection
+            # histogram, so the carried bias stays bit-identical across
+            # devices (vs pmean-averaging per-shard sign updates)
+            load = lax.psum(load, global_axes)
         err = load.mean() - load
         new_q = q0 + cfg.lossfree_lr * jnp.sign(err)
 

@@ -29,10 +29,14 @@ class RouterConfig:
       score_fn: 'softmax' (paper / minimind) or 'sigmoid' (DeepSeek-V3 style).
       router_dtype: dtype for score/dual computation (fp32 for stability).
       use_kernel: route the ADMM dual update through the Pallas kernel.
-      sync: 'local' computes dual prices from the device-local token shard;
-        'global' all-reduces selection histograms across the data axes so q
-        matches the single-device paper semantics exactly.
-      data_axes: mesh axis name(s) tokens are sharded over (for sync='global').
+      sync: 'local' computes dual prices from the device-local token shard
+        (the caller averages them into the warm start); 'global' runs the
+        threshold dual update with psum-reduced order statistics over
+        data_axes so q matches the single-device paper semantics exactly
+        (ref_bip.bip_dual_update_global; lossfree's sign update likewise
+        uses the psum'd global selection histogram).
+      data_axes: mesh axis name(s) tokens are sharded over (for sync='global';
+        () means single-program / single-device, where global is the default).
     """
 
     n_experts: int
@@ -56,6 +60,8 @@ class RouterConfig:
             raise ValueError("need 0 < top_k <= n_experts")
         if self.score_fn not in ("softmax", "sigmoid"):
             raise ValueError(f"unknown score_fn {self.score_fn!r}")
+        if self.sync not in ("local", "global"):
+            raise ValueError(f"unknown sync mode {self.sync!r}")
 
 
 def init_router_state(cfg: RouterConfig) -> Dict[str, Array]:

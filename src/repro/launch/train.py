@@ -102,6 +102,15 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--method", default=None, choices=[None, "bip", "lossfree", "aux_loss", "topk"])
     ap.add_argument("--bip-iters", type=int, default=None)
+    ap.add_argument("--sync", default=None, choices=["local", "global"],
+                    help="BIP dual sync across data shards on a mesh: 'local' "
+                         "solves per-shard duals and averages the warm start, "
+                         "'global' psums the dual order statistics so every "
+                         "device holds the single-device duals (DESIGN.md "
+                         "§Global-sync). Without --mesh/--production, "
+                         "'global' still switches the single-device dual "
+                         "solver to the threshold/bisection form (the mesh "
+                         "reference numerics, bypassing use_kernel)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -167,11 +176,12 @@ def main(argv=None):
     from repro.training.loop import evaluate_ppl
 
     cfg = configs.reduced_for_smoke(args.arch) if args.reduced else configs.get(args.arch)
-    if args.method or args.bip_iters:
+    if args.method or args.bip_iters or args.sync:
         routing = dataclasses.replace(
             cfg.routing,
             strategy=args.method or cfg.routing.strategy,
             bip_iters=args.bip_iters or cfg.routing.bip_iters,
+            sync=args.sync or cfg.routing.sync,
         )
         cfg = dataclasses.replace(cfg, routing=routing)
     if args.bf16:
@@ -199,6 +209,7 @@ def main(argv=None):
     print(
         f"training {cfg.name} [{cfg.family}]"
         f" method={cfg.routing.strategy if cfg.is_moe else 'n/a'}"
+        f" sync={cfg.routing.sync if cfg.is_moe else 'n/a'}"
         f" mesh={dict(mesh.shape) if mesh is not None else None}"
         f" micro={args.micro}"
         f" data={args.data or 'synthetic'}"
@@ -240,6 +251,7 @@ def main(argv=None):
     summary = {
         "arch": cfg.name,
         "method": cfg.routing.strategy if cfg.is_moe else None,
+        "sync": cfg.routing.sync if cfg.is_moe else None,
         "mesh": dict(mesh.shape) if mesh is not None else None,
         "microbatches": args.micro,
         "data": args.data,

@@ -215,11 +215,16 @@ def moe_ffn_local(
     cfg: ModelConfig,
     token_mask: Optional[jnp.ndarray] = None,  # (n,) bool
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Reference path. Returns (y, new_router_state, aux_loss, metrics)."""
+    """Reference path. Returns (y, new_router_state, aux_loss, metrics).
+
+    The router sees the whole batch, so the duals are the paper's global
+    semantics under either sync mode (data_axes=()); this is the trajectory
+    the sync='global' mesh paths are parity-tested against.
+    """
     n, d = x.shape
     m = cfg.routing.n_experts
     cap = expert_capacity(n, cfg)
-    rcfg = router_config(cfg)
+    rcfg = router_config(cfg, data_axes=())
 
     logits = jnp.einsum("nd,dm->nm", x.astype(jnp.float32), params["w_router"])
     out = route(logits, router_state, rcfg, token_mask=token_mask)
@@ -285,6 +290,9 @@ def moe_ffn_ep2d(
     f = cfg.moe_d_ff or cfg.d_ff
     f_shards = n_data_shards if (token_sharded and f % n_data_shards == 0) else 1
     cap = expert_capacity(n_global, cfg)
+    # data_axes deliberately (): routing below sees the GATHERED token batch,
+    # so the duals are paper-global by construction under either sync mode —
+    # psum'ing the order statistics on top would double-count every token
     rcfg = router_config(cfg)
 
     x_spec = P(data_axes if token_sharded else None, None)
@@ -320,9 +328,11 @@ def moe_ffn_ep2d(
                 n_loc = n_global // n_data_shards
                 y_tok = lax.dynamic_slice_in_dim(y_tok, idx * n_loc, n_loc, 0)
 
-        # routing ran on the gathered tokens: identical on every data rank,
-        # but all_gather outputs are typed varying-over-data — the pmeans
-        # are semantic no-ops that re-establish replication for check_vma
+        # routing ran on the gathered tokens (global duals regardless of
+        # cfg.routing.sync): identical on every data rank, but all_gather
+        # outputs are typed varying-over-data — the pmeans are semantic
+        # no-ops (NOT cross-shard dual averaging, every rank already holds
+        # the converged global q) that re-establish replication for check_vma
         new_q = out.state["q"]
         load = out.metrics["load"]
         dropped = out.metrics["dropped_frac_cap1"]
@@ -415,7 +425,12 @@ def moe_ffn_ep2ds(
     cap = expert_capacity(n_loc, cfg)
     f = cfg.moe_d_ff or cfg.d_ff
     f_sharded = f % n_data_shards == 0
-    rcfg = router_config(cfg)
+    # sync='global': route() runs the psum'd threshold dual update over the
+    # data axes, so each rank routes its local shard against the SAME duals
+    # the unsharded reference would compute (DESIGN.md §Global-sync)
+    rcfg = router_config(
+        cfg, data_axes=data_axes if cfg.routing.sync == "global" else ()
+    )
 
     wf_spec = P(model_axis, None, data_axes if f_sharded else None)
     wd_spec = P(model_axis, data_axes if f_sharded else None, None)
@@ -448,7 +463,12 @@ def moe_ffn_ep2ds(
         y_tok = plan.combine(y, out.combine_weights, expert_offset=rank * m_loc)
         y_tok = lax.psum(y_tok, model_axis)
 
-        new_q = lax.pmean(out.state["q"], data_axes)
+        # global sync: q converged identically per shard (vma-replicated, no
+        # averaging); local sync: pmean the per-shard duals into the warm start
+        if cfg.routing.sync == "global":
+            new_q = out.state["q"]
+        else:
+            new_q = lax.pmean(out.state["q"], data_axes)
         load = lax.psum(out.metrics["load"], data_axes)
         mean_load = (n_global * k) / m
         mets = {
@@ -533,8 +553,13 @@ def moe_ffn_ep(
         # combine across expert-owners (rides the TP all-reduce)
         y_tok = lax.psum(y_tok, model_axis)
 
-        # keep router state replicated: average duals over data shards
-        new_q = lax.pmean(out.state["q"], data_axes) if data_axes else out.state["q"]
+        # router state: sync='global' duals already converged identically on
+        # every shard (psum'd order statistics inside route, vma-replicated);
+        # sync='local' averages the per-shard duals into the warm start
+        if data_axes and cfg.routing.sync != "global":
+            new_q = lax.pmean(out.state["q"], data_axes)
+        else:
+            new_q = out.state["q"]
         # global balance metrics: sum local loads over data shards
         load = out.metrics["load"]
         dropped = out.metrics["dropped_frac_cap1"]

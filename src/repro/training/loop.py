@@ -27,6 +27,13 @@ Production shape (DESIGN.md §Training):
   accumulating gradients in the parameter dtype; router states thread
   *sequentially* through microbatches (the BIP dual price q updates between
   microbatches, exactly as it would across smaller true steps).
+* **Router dual sync** — `cfg.routing.sync` rides into the compiled sharded
+  step through the model: 'global' makes every BIP gate run the psum'd
+  threshold dual update over the mesh's data axes inside the step
+  (`ref_bip.bip_dual_update_global`), so the carried q is the single-device
+  paper trajectory; 'local' solves per-shard duals and pmean-averages them
+  into the warm start (DESIGN.md §Global-sync). The replicated-q sharding
+  spec (`distributed.sharding.router_state_specs`) is the same either way.
 * **Checkpointing** — `train_loop(ckpt_dir=..., ckpt_every=N, resume=True)`
   saves the full TrainState (params, Adam moments, step counter, router
   states q) through `checkpoint.store` and resumes bit-exactly: the data

@@ -1,0 +1,38 @@
+"""Shared subprocess runner for multi-device tests.
+
+XLA locks the host device count per process, so every test that needs a
+forced N-device CPU "mesh" runs its body in a fresh subprocess with
+XLA_FLAGS set before jax imports. One copy of the runner + prelude lives
+here; test_distributed.py, test_train_sharded.py, and the sharded arch
+smokes all use it.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# imports shared by every forced-device script; jax must come after the env
+PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+"""
+
+
+def run_code(code: str, timeout: int = 900) -> str:
+    """Run `code` in a subprocess from the repo root; assert success."""
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        cwd=REPO_ROOT,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout

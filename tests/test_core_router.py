@@ -11,6 +11,8 @@ from repro.core import (
     RouterConfig,
     balance_metrics,
     bip_dual_update,
+    bip_dual_update_global,
+    bip_dual_update_masked,
     bip_dual_update_threshold,
     bip_route_reference,
     init_router_state,
@@ -102,6 +104,125 @@ def test_dual_update_threshold_matches_topk_variant(seed, t):
     )
     np.testing.assert_allclose(np.asarray(q_ref), np.asarray(q_thr), atol=3e-5)
     np.testing.assert_allclose(np.asarray(p_ref), np.asarray(p_thr), atol=3e-5)
+
+
+def _selection_sets(s, q, k):
+    """Per-row top-k index sets under corrected scores, plus the boundary
+    gap (k-th minus (k+1)-th corrected value) that prices tie fragility."""
+    corrected = np.asarray(s) - np.asarray(q)[None, :]
+    order = np.argsort(-corrected, axis=-1, kind="stable")
+    sets = [frozenset(row[:k]) for row in order]
+    kth = np.take_along_axis(corrected, order, -1)
+    gaps = kth[:, k - 1] - kth[:, k]
+    return sets, gaps
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.sampled_from([1, 2, 4, 8]),
+    warm=st.floats(0.0, 0.3),
+    skew=st.floats(0.0, 2.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_threshold_vs_sort_dual_selection_set_equivalence(seed, t, warm, skew):
+    """The threshold (bisection) dual update is the sync='global' building
+    block: the expert SETS it selects must match the sort-based oracle's
+    for every token whose top-k boundary gap exceeds the bisection
+    resolution (~6e-8 at n_bisect=40 over softmax ranges; tokens inside
+    that band are capacity-marginal and LP-degenerate — either choice is
+    an optimal assignment). Warm-start duals exercise the carried-q path."""
+    rng = np.random.default_rng(seed)
+    n, m, k = 256, 16, 4
+    s = _scores(rng, n, m, skew=skew)
+    q0 = jnp.asarray(rng.uniform(0, warm, (m,)).astype(np.float32))
+    q_ref, _ = bip_dual_update(s, q0, top_k=k, n_iters=t)
+    q_thr, _ = bip_dual_update_threshold(s, q0, top_k=k, n_iters=t, n_bisect=40)
+    np.testing.assert_allclose(np.asarray(q_ref), np.asarray(q_thr), atol=3e-5)
+    sets_ref, gaps = _selection_sets(s, q_ref, k)
+    sets_thr, _ = _selection_sets(s, q_thr, k)
+    robust = gaps > 3e-4  # >=10x the dual atol: no margin flake
+    assert robust.sum() > 0  # the property must not be vacuous
+    mismatched = [
+        i for i in range(n) if robust[i] and sets_ref[i] != sets_thr[i]
+    ]
+    assert not mismatched, (mismatched[:5], gaps[mismatched[:5]])
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.sampled_from([2, 4]),
+    frac=st.floats(0.2, 0.9),
+)
+@settings(max_examples=25, deadline=None)
+def test_masked_dual_update_equals_dense_subset(seed, t, frac):
+    """Masked padding rows (the serving path) must be invisible: the dual
+    from the masked update over (real + padding) rows equals the sort-based
+    update over just the real rows, and the selection sets on real rows
+    agree outside the degenerate boundary band. Also pins the all-True
+    mask to the unmasked threshold variant."""
+    rng = np.random.default_rng(seed)
+    n, m, k = 192, 8, 2
+    s = _scores(rng, n, m, skew=1.0)
+    q0 = jnp.asarray(rng.uniform(0, 0.2, (m,)).astype(np.float32))
+    mask = rng.random(n) < frac
+    mask[0] = True  # never all-padding
+    jmask = jnp.asarray(mask)
+
+    q_m, _ = bip_dual_update_masked(s, q0, jmask, top_k=k, n_iters=t, n_bisect=40)
+    q_dense, _ = bip_dual_update(
+        jnp.asarray(np.asarray(s)[mask]), q0, top_k=k, n_iters=t
+    )
+    np.testing.assert_allclose(np.asarray(q_m), np.asarray(q_dense), atol=3e-5)
+
+    s_real = np.asarray(s)[mask]
+    sets_m, gaps = _selection_sets(s_real, q_m, k)
+    sets_d, _ = _selection_sets(s_real, q_dense, k)
+    robust = gaps > 3e-4
+    mismatched = [
+        i for i in range(len(sets_m)) if robust[i] and sets_m[i] != sets_d[i]
+    ]
+    assert not mismatched, mismatched[:5]
+
+    # all-True mask == the unmasked threshold variant (same bisection)
+    q_all, _ = bip_dual_update_masked(
+        s, q0, jnp.ones((n,), bool), top_k=k, n_iters=t, n_bisect=40
+    )
+    q_thr, _ = bip_dual_update_threshold(s, q0, top_k=k, n_iters=t, n_bisect=40)
+    np.testing.assert_allclose(np.asarray(q_all), np.asarray(q_thr), atol=1e-6)
+
+
+def test_global_dual_update_single_shard_matches_sort_oracle():
+    """bip_dual_update_global with axis_names=() and no mask reproduces the
+    independent sort-based oracle up to bisection resolution (the
+    sync='global' route branch relies on this for the unsharded reference
+    trajectory; bip_dual_update_threshold is an alias of the global
+    implementation, so the oracle is the only independent check)."""
+    rng = np.random.default_rng(11)
+    n, m, k = 256, 16, 4
+    s = _scores(rng, n, m, skew=1.5)
+    q0 = jnp.asarray(rng.uniform(0, 0.1, (m,)).astype(np.float32))
+    q_g, p_g = bip_dual_update_global(s, q0, top_k=k, n_iters=4, n_bisect=40)
+    q_s, p_s = bip_dual_update(s, q0, top_k=k, n_iters=4)
+    np.testing.assert_allclose(np.asarray(q_g), np.asarray(q_s), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(p_g), np.asarray(p_s), atol=3e-5)
+
+
+def test_route_global_sync_single_device_matches_threshold_duals():
+    """route(sync='global') off-mesh must carry the threshold-solver duals
+    (not the sort-based ones): the warm-start state equals a direct
+    bip_dual_update_global call on the same scores."""
+    rng = np.random.default_rng(12)
+    n, m, k = 256, 8, 2
+    cfg = RouterConfig(n_experts=m, top_k=k, strategy="bip", bip_iters=4,
+                       sync="global")
+    logits = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    out = route(logits, init_router_state(cfg), cfg)
+    s = jax.nn.softmax(logits, axis=-1)
+    q_direct, _ = bip_dual_update_global(s, jnp.zeros((m,)), top_k=k, n_iters=4)
+    np.testing.assert_allclose(
+        np.asarray(out.state["q"]), np.asarray(q_direct), atol=1e-7
+    )
+    assert float(out.metrics["max_vio"]) < 0.3
 
 
 def test_objective_near_lp_optimum():

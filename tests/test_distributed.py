@@ -1,34 +1,11 @@
 """Distribution-layer tests on a forced multi-device host (subprocesses,
-because XLA locks the device count per process)."""
-import os
-import subprocess
-import sys
-
-import pytest
-
-_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+because XLA locks the device count per process; shared runner in
+tests/_forced_devices.py)."""
+from _forced_devices import PRELUDE, run_code
 
 
 def _run(code: str, timeout: int = 600) -> str:
-    out = subprocess.run(
-        [sys.executable, "-c", code],
-        capture_output=True,
-        text=True,
-        cwd=_REPO_ROOT,
-        timeout=timeout,
-    )
-    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
-    return out.stdout
-
-
-PRELUDE = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
-sys.path.insert(0, "src")
-import jax, jax.numpy as jnp, numpy as np, dataclasses
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-"""
+    return run_code(code, timeout=timeout)
 
 
 def test_sharded_train_step_matches_single_device():
