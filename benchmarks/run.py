@@ -92,6 +92,10 @@ def main() -> None:
     for r in router_overhead.run():
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
+    print("# router dual sync sweep on a 4x2 mesh (BENCH_router_sync.json)", flush=True)
+    for r in router_overhead.run_sync_sweep(smoke=not args.full):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+
     if not args.skip_train:
         print("# paper tables 2/3 reproduction (reduced scale)", flush=True)
         from benchmarks import paper_repro

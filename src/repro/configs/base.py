@@ -30,10 +30,21 @@ class RoutingSpec:
     # 'local'  per-shard duals, pmean-averaged into the warm start — no
     #          router collectives, balance guaranteed per shard only.
     # 'global' psum'd threshold order statistics: every device converges on
-    #          the single-device duals over the global batch (~n_bisect
-    #          fused (m,)-psums per dual iteration).
+    #          the single-device duals over the global batch
+    #          (bisect_rounds(n_bisect, bisect_fanout) fused psums per dual
+    #          iteration; 5 at the defaults).
     sync: str = "local"
     use_kernel: bool = False       # Pallas ADMM kernel for the dual update
+    # threshold-bisection order statistic (sync='global' / masked paths):
+    n_bisect: int = 26             # bits of resolution (bracket width 2^-n_bisect)
+    # thresholds per fused round, rounded UP to the next 2^r - 1 (midpoint
+    # ladder; 1 = classic bisection):
+    bisect_fanout: int = 32
+    # dual forecaster (predictive warm-start of the bisection bracket):
+    forecast: bool = False
+    forecast_decay: float = 0.9    # EMA decay for the statistic and its error
+    forecast_margin: float = 4.0   # bracket half-width = margin·EMA|err| + floor
+    forecast_floor: float = 1e-3
     # expert-parallel implementation (DESIGN.md §6 / EXPERIMENTS.md §Perf):
     # 'ep2d' gathers activations, weights stay (experts->model, f->data)
     #        sharded; routing sees the full microbatch (paper-global duals).

@@ -10,6 +10,7 @@ from repro.core.approx import ApproxBIPGate
 from repro.core.metrics import BalanceTracker, balance_metrics, expert_load, max_violation
 from repro.core.online import OnlineBIPGate
 from repro.core.ref_bip import (
+    bisect_rounds,
     bip_dual_update,
     bip_dual_update_global,
     bip_dual_update_masked,
@@ -29,6 +30,7 @@ __all__ = [
     "RouterConfig",
     "RouterOutput",
     "balance_metrics",
+    "bisect_rounds",
     "bip_dual_update",
     "bip_dual_update_global",
     "bip_dual_update_masked",

@@ -20,6 +20,7 @@ stay the raw scores, so q carries no gradient (like Loss-Free's bias).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -121,11 +122,35 @@ def bip_route_reference(
 # ---------------------------------------------------------------------------
 
 
-def _count_greater(x: jnp.ndarray, thr: jnp.ndarray, axis: int, axis_names) -> jnp.ndarray:
-    cnt = jnp.sum((x > thr).astype(jnp.float32), axis=axis)
-    if axis_names:
-        cnt = lax.psum(cnt, axis_names)
-    return cnt
+def bisect_ladder_depth(fanout: int) -> int:
+    """Midpoint-ladder depth r for a requested per-round probe budget.
+
+    The fused round probes a depth-r midpoint ladder of the bracket —
+    2^r - 1 interior points, every one a chain of exact (a+b)*0.5
+    midpoints — so `fanout` rounds UP to the next 2^r - 1. The ladder
+    construction (rather than equally spaced convex combinations) is what
+    keeps the thresholds bit-deterministic across compilation contexts:
+    (a+b)*0.5 has no mul+add to contract into an fma, so eager reference
+    runs, jitted mesh programs, and every device of a shard_map agree
+    bitwise — which the cross-shard parity suite checks down to exact
+    load histograms.
+    """
+    if fanout < 1:
+        raise ValueError(f"fanout must be >= 1, got {fanout}")
+    return max(1, math.ceil(math.log2(fanout + 1.0)))
+
+
+def bisect_rounds(n_bisect: int, fanout: int) -> int:
+    """Worst-case fused-bisection rounds for `n_bisect` bits of resolution.
+
+    Each round shrinks the bracket 2^r x (r = bisect_ladder_depth(fanout)),
+    so fanout=1 is classic bisection (n_bisect rounds) and fanout=F needs
+    ceil(n_bisect / r) rounds for the same final width — 5 rounds at the
+    production defaults (n_bisect=26, fanout=32 -> r=6).
+    """
+    if n_bisect < 1:
+        raise ValueError(f"n_bisect must be >= 1, got {n_bisect}")
+    return max(1, math.ceil(n_bisect / bisect_ladder_depth(fanout)))
 
 
 def kth_largest_threshold(
@@ -137,19 +162,48 @@ def kth_largest_threshold(
     axis_names: tuple = (),
     lo: Optional[jnp.ndarray] = None,
     hi: Optional[jnp.ndarray] = None,
+    fanout: int = 1,
+    window: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
 ) -> jnp.ndarray:
-    """(kth+1)-th largest along `axis` via bisection on the value domain.
+    """(kth+1)-th largest along `axis` via fused multi-threshold bisection.
 
     Finds the largest threshold t such that #{x > t} <= kth; the order
-    statistic lies in (t_lo, t_hi] and we return the midpoint after `n_bisect`
-    halvings. With `axis_names`, counts (and bounds) are reduced across those
-    mesh axes, computing a global order statistic over sharded data at the
-    cost of ~n_bisect scalar collectives (fused into one psum per iteration).
+    statistic lies in a bracket (t_lo, t_hi] that each round shrinks 2^r x
+    (r = bisect_ladder_depth(fanout)): the round probes the bracket's
+    depth-r midpoint ladder — 2^r - 1 interior thresholds — with ONE fused
+    exceedance count (with `axis_names`, one (probes * batch)-sized psum
+    across those mesh axes instead of 2^r - 1 sequential round-trips),
+    then GATHERS the sub-interval whose edge counts bracket `kth` out of
+    the ladder. fanout=1 is classic midpoint bisection. Every ladder point
+    is a chain of (a+b)*0.5 midpoints (exact multiply, no fma-contractible
+    mul+add) and the new bounds are selected, never recomputed, so the
+    thresholds are bit-identical across eager/jit/shard_map programs —
+    the parity suite's exact load-histogram checks depend on this.
 
-    Exactness: for routing we only need the *set* {x > t} to have kth elements;
-    26 bisections over a [-2, 2] range give ~6e-8 resolution, far below any
-    meaningful score gap in fp32 softmax outputs.
+    Rounds run under a static `bisect_rounds(n_bisect, fanout)` trip
+    count, but each round branches on convergence (every bracket narrower
+    than the target resolution, initial width * 2^-n_bisect) and skips its
+    count — and its collective — once converged. The convergence predicate
+    only reads collectively-reduced bounds, so it is replicated and every
+    device in the mesh takes the identical branch (a lax.cond, not a
+    lax.while_loop, because shard_map's replication checker has rules for
+    scan/cond but not while on this jax version).
+
+    `window` is an optional (w_lo, w_hi) predicted bracket per batch element
+    (see the router's load forecaster). Its validity check — the statistic
+    lies in (w_lo, w_hi] iff count(w_lo) > kth >= count(w_hi) — rides in
+    round 0's fused count at zero extra collectives; where valid it is
+    intersected with round 0's sub-interval, where stale the full-range
+    sub-interval is used, so a wrong forecast costs nothing but the saved
+    rounds.
+
+    Exactness: for routing we only need the *set* {x > t} to have kth
+    elements; 26 bits over a [-2, 2] range give ~6e-8 resolution, far below
+    any meaningful score gap in fp32 softmax outputs. Counts are small exact
+    integers in f32, so given identical (replicated) brackets every device
+    converges on bit-identical thresholds.
     """
+    axis_names = tuple(axis_names)
     if lo is None:
         lo = jnp.min(x, axis=axis)
         if axis_names:
@@ -158,20 +212,93 @@ def kth_largest_threshold(
         hi = jnp.max(x, axis=axis)
         if axis_names:
             hi = lax.pmax(hi, axis_names)
-    lo = lo - 1e-6  # ensure the answer is strictly inside (lo, hi]
 
-    def body(_, bounds):
+    xm = jnp.moveaxis(x, axis, 0)  # (n, *rest)
+    rest = xm.shape[1:]
+    dt = xm.dtype
+    # ensure the answer is strictly inside (lo, hi]
+    lo = jnp.broadcast_to(jnp.asarray(lo, dt), rest) - jnp.asarray(1e-6, dt)
+    hi = jnp.broadcast_to(jnp.asarray(hi, dt), rest)
+
+    depth = bisect_ladder_depth(fanout)
+    n_probes = 2 ** depth - 1
+    max_rounds = bisect_rounds(n_bisect, fanout)
+    target = jnp.max(hi - lo) * jnp.asarray(2.0 ** (-n_bisect), dt)
+
+    def fused_counts(pts, extra=()):
+        # exceedance counts for the interior ladder points pts[1:-1], via
+        # bucketize (searchsorted + scatter histogram + reverse cumsum):
+        # O(n log P) comparisons instead of the O(n*P) broadcast compare,
+        # and still exact small-integer counts. `extra` thresholds (the
+        # window validation probes) are counted by direct compare and ride
+        # the SAME psum — one collective either way.
+        n_pts = pts.shape[0]
+        ptsf = pts.reshape(n_pts, -1)
+        xf = xm.reshape(xm.shape[0], -1)
+        # b = #{ladder points < x}: x > pts[i] iff b > i
+        b = jax.vmap(
+            lambda a, v: jnp.searchsorted(a, v, side="left"),
+            in_axes=(1, 1), out_axes=1,
+        )(ptsf, xf)
+        hist = jax.vmap(
+            lambda col: jnp.zeros((n_pts + 1,), jnp.float32).at[col].add(1.0),
+            in_axes=1, out_axes=1,
+        )(b)
+        rc = jnp.cumsum(hist[::-1], axis=0)[::-1]  # rc[i] = #{b >= i}
+        cnt = rc[2:n_pts].reshape((n_pts - 2,) + rest)  # #{x > pts[i]}, i=1..P-2
+        if extra:
+            ex = jnp.stack(
+                [jnp.sum((xm > e[None]).astype(jnp.float32), axis=0) for e in extra]
+            )
+            cnt = jnp.concatenate([cnt, ex], axis=0)
+        if axis_names:
+            cnt = lax.psum(cnt, axis_names)
+        return cnt
+
+    def ladder(lo_, hi_):
+        # depth-r midpoint ladder: (2^r + 1, *rest) sorted boundary points
+        # including lo_/hi_; each refinement interleaves adjacent midpoints
+        pts = jnp.stack([lo_, hi_])
+        for _ in range(depth):
+            mids = (pts[:-1] + pts[1:]) * 0.5
+            body = jnp.stack([pts[:-1], mids], axis=1).reshape((-1,) + rest)
+            pts = jnp.concatenate([body, pts[-1:]], axis=0)
+        return pts
+
+    def subinterval(pts, cnt):
+        # counts are non-increasing in the threshold, so the number of
+        # probes with count > kth indexes the ladder cell holding the stat;
+        # the new bounds are GATHERED ladder points (no recomputation)
+        j = jnp.sum((cnt > kth).astype(jnp.int32), axis=0)[None]  # (1, *rest)
+        new_lo = jnp.take_along_axis(pts, j, axis=0)[0]
+        new_hi = jnp.take_along_axis(pts, j + 1, axis=0)[0]
+        return new_lo, new_hi
+
+    # round 0, peeled: carries the two window-edge validation probes (if any)
+    # inside the same fused count
+    pts = ladder(lo, hi)
+    if window is not None:
+        w_lo = jnp.broadcast_to(jnp.asarray(window[0], dt), rest)
+        w_hi = jnp.broadcast_to(jnp.asarray(window[1], dt), rest)
+        cnt = fused_counts(pts, extra=(w_lo, w_hi))
+        new_lo, new_hi = subinterval(pts, cnt[:n_probes])
+        ok = (cnt[n_probes] > kth) & (cnt[n_probes + 1] <= kth) & (w_lo < w_hi)
+        lo = jnp.where(ok, jnp.maximum(w_lo, new_lo), new_lo)
+        hi = jnp.where(ok, jnp.minimum(w_hi, new_hi), new_hi)
+    else:
+        lo, hi = subinterval(pts, fused_counts(pts))
+
+    def round_body(_, bounds):
         lo_, hi_ = bounds
-        mid = 0.5 * (lo_ + hi_)
-        cnt = _count_greater(x, jnp.expand_dims(mid, axis), axis, axis_names)
-        # If more than `kth` elements exceed mid, the (kth+1)-th largest is
-        # above mid; move lo up. Else it is <= mid; move hi down.
-        above = cnt > kth
-        lo_ = jnp.where(above, mid, lo_)
-        hi_ = jnp.where(above, hi_, mid)
-        return (lo_, hi_)
+        converged = jnp.max(hi_ - lo_) <= target
 
-    lo, hi = lax.fori_loop(0, n_bisect, body, (lo, hi))
+        def narrow(b):
+            p = ladder(b[0], b[1])
+            return subinterval(p, fused_counts(p))
+
+        return lax.cond(converged, lambda b: b, narrow, (lo_, hi_))
+
+    lo, hi = lax.fori_loop(0, max_rounds - 1, round_body, (lo, hi))
     return hi  # upper end: guarantees #{x > hi} <= kth (capacity respected)
 
 
@@ -183,6 +310,7 @@ def bip_dual_update_threshold(
     n_iters: int,
     axis_names: tuple = (),
     n_bisect: int = 26,
+    fanout: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sort-free ADMM dual update; optionally global over sharded tokens.
 
@@ -196,7 +324,7 @@ def bip_dual_update_threshold(
     """
     return bip_dual_update_global(
         s, q0, top_k=top_k, n_iters=n_iters,
-        axis_names=axis_names, n_bisect=n_bisect,
+        axis_names=axis_names, n_bisect=n_bisect, fanout=fanout,
     )
 
 
@@ -209,7 +337,11 @@ def bip_dual_update_global(
     token_mask: Optional[jnp.ndarray] = None,  # (n,) bool; False rows invisible
     axis_names: tuple = (),
     n_bisect: int = 26,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    fanout: int = 1,
+    score_bounds: Optional[Tuple[float, float]] = None,
+    window: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    with_stats: bool = False,
+):
     """ADMM dual update over the union of real tokens across `axis_names`.
 
     This is the sync='global' building block (DESIGN.md §Global-sync): `s`
@@ -219,9 +351,26 @@ def bip_dual_update_global(
     reduced across `axis_names`, so every device converges on the SAME
     dual vector q over the GLOBAL token batch while only ever holding its
     shard. The token-price step p is row-wise over experts and stays fully
-    local. Collective cost: one fused (m,)-psum per bisection step plus a
-    pmin/pmax bound pair per dual iteration (~n_iters·(n_bisect+2) small
-    collectives), traded for the step-wise global balance guarantee.
+    local. Collective cost per dual iteration: `bisect_rounds(n_bisect,
+    fanout)` fused (m*fanout,)-psums, plus a pmin/pmax bound pair ONLY when
+    `score_bounds` is not given (so fanout=32 + static bounds turns PR 5's
+    ~n_iters*(n_bisect+2) round-trips into ~n_iters*6).
+
+    `score_bounds` is an optional static (lo, hi) on the entries of `s`
+    (softmax/sigmoid scores live in [0, 1]): since q >= 0 implies the token
+    price p stays within [0, max(hi, 0)], x = s - p is bracketed by
+    [lo - max(hi, 0), hi] with no data-dependent (and hence no collective)
+    bound computation at all.
+
+    `window` is an optional (w_lo, w_hi) forecast bracket per expert for
+    the pre-clamp order statistic t (see the router's load forecaster); it
+    is validated inside round 0 of every dual iteration's fused count and
+    ignored where stale, so warm-starts are free when wrong and save
+    bisection rounds when right.
+
+    `with_stats=True` additionally returns the final iteration's pre-clamp
+    order statistic t (q = max(0, t)) so callers can update forecaster
+    state; the (q, p) return signature is unchanged otherwise.
 
     `token_mask` marks real rows (serving padding is False): masked rows
     are pushed to -1e30 so they sink out of every order statistic, and the
@@ -231,8 +380,9 @@ def bip_dual_update_global(
 
     vma typing (shard_map check_vma): q0 enters replicated and the q carry
     STAYS replicated — every q_new is assembled from psum/pmin/pmax
-    outputs — so callers can return it under an out_spec of P(None) with
-    no re-replicating pmean. The p carry inherits s's varying type.
+    outputs (or static bounds) — so callers can return it under an
+    out_spec of P(None) with no re-replicating pmean. The p carry inherits
+    s's varying type.
 
     With axis_names=() and an all-True (or absent) mask this matches
     `bip_dual_update` up to bisection resolution (~6e-8).
@@ -248,39 +398,50 @@ def bip_dual_update_global(
         n_real = jnp.sum(token_mask).astype(jnp.int32)
     n_glob = lax.psum(n_real, axis_names) if axis_names else n_real
     cap_idx = (n_glob * top_k) // m  # traced counterpart of expert_kth_index
+    slack = cap_idx >= jnp.maximum(n_glob, 1)
 
-    def body(_, pq):
-        q, _p = pq
+    if score_bounds is not None:
+        s_lo, s_hi = float(score_bounds[0]), float(score_bounds[1])
+        lo_b = jnp.full((m,), s_lo - max(s_hi, 0.0), s.dtype)
+        hi_b = jnp.full((m,), s_hi, s.dtype)
+
+    def body(_, carry):
+        q, _p, _t = carry
         if top_k >= m:
             p = jnp.zeros((n,), s.dtype)
         else:
             p = jnp.maximum(0.0, kth_largest(s_m - q[None, :], top_k, axis=-1))
         x = s_m - p[:, None]
-        # bisection bounds from real entries only, else resolution dies
-        if token_mask is None:
-            lo = jnp.min(x, axis=0)
-            hi = jnp.max(x, axis=0)
+        if score_bounds is not None:
+            lo, hi = lo_b, hi_b
         else:
-            lo = jnp.min(jnp.where(token_mask[:, None], x, jnp.inf), axis=0)
-            hi = jnp.max(jnp.where(token_mask[:, None], x, -jnp.inf), axis=0)
-        if axis_names:
-            lo = lax.pmin(lo, axis_names)
-            hi = lax.pmax(hi, axis_names)
-        q_new = jnp.maximum(
-            0.0,
-            kth_largest_threshold(
-                x, cap_idx, axis=0,
-                axis_names=axis_names, n_bisect=n_bisect, lo=lo, hi=hi,
-            ),
+            # bisection bounds from real entries only, else resolution dies
+            if token_mask is None:
+                lo = jnp.min(x, axis=0)
+                hi = jnp.max(x, axis=0)
+            else:
+                lo = jnp.min(jnp.where(token_mask[:, None], x, jnp.inf), axis=0)
+                hi = jnp.max(jnp.where(token_mask[:, None], x, -jnp.inf), axis=0)
+            if axis_names:
+                lo = lax.pmin(lo, axis_names)
+                hi = lax.pmax(hi, axis_names)
+        t = kth_largest_threshold(
+            x, cap_idx, axis=0,
+            axis_names=axis_names, n_bisect=n_bisect, lo=lo, hi=hi,
+            fanout=fanout, window=window,
         )
         # slack capacity (cap index past the global real rows) -> price 0
-        q_new = jnp.where(cap_idx >= jnp.maximum(n_glob, 1), 0.0, q_new)
-        return (q_new, p)
+        t = jnp.where(slack, 0.0, t)
+        q_new = jnp.maximum(0.0, t)
+        return (q_new, p, t)
 
     p0 = 0.0 * s[:, 0]  # inherit s's vma type (see bip_dual_update)
-    q, p = lax.fori_loop(0, n_iters, body, (q0.astype(s.dtype), p0))
+    t0 = 0.0 * q0.astype(s.dtype)  # inherit q0's replicated type likewise
+    q, p, t = lax.fori_loop(0, n_iters, body, (q0.astype(s.dtype), p0, t0))
     # an all-padding invocation (idle engine step) must not move the dual
     q = jnp.where(n_glob > 0, q, q0.astype(s.dtype))
+    if with_stats:
+        return q, p, t
     return q, p
 
 
@@ -292,6 +453,7 @@ def bip_dual_update_masked(
     top_k: int,
     n_iters: int,
     n_bisect: int = 26,
+    fanout: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """ADMM dual update over the REAL rows only (serving-chunk padding).
 
@@ -303,5 +465,5 @@ def bip_dual_update_masked(
     """
     return bip_dual_update_global(
         s, q0, top_k=top_k, n_iters=n_iters,
-        token_mask=mask, axis_names=(), n_bisect=n_bisect,
+        token_mask=mask, axis_names=(), n_bisect=n_bisect, fanout=fanout,
     )

@@ -29,6 +29,7 @@ per-shard semantics by vmapping the dual update over token groups.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -194,6 +195,16 @@ def _aux_loss(
     return cfg.aux_loss_alpha * jnp.sum(f * p_mean)
 
 
+_warned: set = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    """Emit a config-degradation warning once per process (trace-time)."""
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(msg, stacklevel=3)
+
+
 def _bip_q(s: jnp.ndarray, q0: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
     """Dispatch the ADMM dual update to the reference or the Pallas kernel."""
     if cfg.use_kernel:
@@ -217,7 +228,9 @@ def route(
     """Route a flattened batch of tokens.
 
     logits: (n, m) router logits (pre-gating-function).
-    state:  {'q': (m,)} carried vector (ADMM warm start / Loss-Free bias).
+    state:  {'q': (m,)} carried vector (ADMM warm start / Loss-Free bias);
+      with cfg.forecast also {'q_ema', 'q_err'} (m,) dual-forecaster EMAs.
+      Unrecognized keys pass through untouched.
     token_mask: optional (n,) bool — serving padding rows are False; they
       still get selections (static shapes) but are excluded from every
       state update and loss, so the carried q tracks real traffic only
@@ -229,6 +242,9 @@ def route(
     q0 = state["q"]
     aux = jnp.zeros((), dtype=cfg.router_dtype)
     new_q = q0
+    # carry every state key through unchanged unless a branch updates it, so
+    # the router-state pytree structure is stable across scan/loop carries
+    new_state = dict(state)
 
     # sync='global': the dual update runs with psum-reduced counts over the
     # data axes, so q converges identically on every shard (DESIGN.md
@@ -237,21 +253,65 @@ def route(
     global_axes = tuple(cfg.data_axes) if cfg.sync == "global" else ()
 
     if cfg.strategy == "bip":
-        if cfg.sync == "global" or token_mask is not None:
+        if cfg.forecast and (cfg.sync != "global" or cfg.use_kernel):
+            _warn_once(
+                "forecast-inactive",
+                "RouterConfig.forecast only drives the reference sync='global' "
+                "bisection path; with sync='local' or use_kernel=True the "
+                "forecaster state is carried but never consulted.",
+            )
+        if cfg.sync == "global" and cfg.use_kernel and token_mask is None:
+            # collective Pallas path: the kernel's (m, n_bins) histogram
+            # counts are psum'd across cfg.data_axes between the count pass
+            # and the rank location, so the kernel now has a true global
+            # form (kernels/ops.py). Empty data_axes degrades to the plain
+            # single-device kernel.
+            from repro.kernels import ops as kernel_ops  # lazy: import cycle
+
+            q = kernel_ops.bip_dual_update(
+                lax.stop_gradient(s), q0,
+                top_k=cfg.top_k, n_iters=cfg.bip_iters,
+                axis_names=global_axes,
+            )
+            corrected = s - q[None, :]
+            new_q = q
+        elif cfg.sync == "global" or token_mask is not None:
             # one implementation serves the mesh path (axis_names), the
             # serving path (token_mask), AND the unsharded sync='global'
             # reference (axes=()): all three share the bisection numerics,
             # so a sharded global-sync run reproduces the single-device
             # trajectory bit-for-bit at the dual level — the sort-based
             # update would instead park q exactly ON the capacity-marginal
-            # token's score and make the comparison tie-degenerate. The
-            # Pallas dual kernel has no collective form, so sync='global'
-            # always uses this reference implementation.
-            q, _ = ref_bip.bip_dual_update_global(
+            # token's score and make the comparison tie-degenerate.
+            if cfg.use_kernel:  # only reachable with a token mask
+                _warn_once(
+                    "kernel-masked",
+                    "use_kernel=True has no masked (serving-padding) form; "
+                    "falling back to the reference masked dual update.",
+                )
+            # load forecaster: predict the pre-clamp order statistic t from
+            # its EMA, bracket it by the EMA'd error, and let the bisection
+            # validate the bracket in-band (free when stale, rounds saved
+            # when right)
+            use_forecast = cfg.forecast and not cfg.use_kernel and "q_ema" in state
+            window = None
+            if use_forecast:
+                half = cfg.forecast_margin * state["q_err"] + cfg.forecast_floor
+                window = (state["q_ema"] - half, state["q_ema"] + half)
+            # scores are softmax/sigmoid outputs, so [0, 1] is a static
+            # bracket: no data-dependent (pmin/pmax) bound collectives
+            q, _, t = ref_bip.bip_dual_update_global(
                 lax.stop_gradient(s), q0,
                 top_k=cfg.top_k, n_iters=cfg.bip_iters,
                 token_mask=token_mask, axis_names=global_axes,
+                n_bisect=cfg.n_bisect, fanout=cfg.bisect_fanout,
+                score_bounds=(0.0, 1.0), window=window, with_stats=True,
             )
+            if use_forecast:
+                d = cfg.forecast_decay
+                err = jnp.abs(t - state["q_ema"])
+                new_state["q_ema"] = d * state["q_ema"] + (1.0 - d) * t
+                new_state["q_err"] = d * state["q_err"] + (1.0 - d) * err
             corrected = s - q[None, :]
             new_q = q
         elif local_shards > 1 and cfg.sync == "local":
@@ -294,10 +354,11 @@ def route(
         w, idx = _topk_select(s, s, cfg)
 
     metrics = balance_metrics(idx, m, cfg.top_k)
+    new_state["q"] = new_q
     return RouterOutput(
         combine_weights=w,
         expert_index=idx,
-        state={"q": lax.stop_gradient(new_q)},
+        state={k: lax.stop_gradient(v) for k, v in new_state.items()},
         aux_loss=aux,
         metrics=metrics,
     )

@@ -37,6 +37,21 @@ class RouterConfig:
         uses the psum'd global selection histogram).
       data_axes: mesh axis name(s) tokens are sharded over (for sync='global';
         () means single-program / single-device, where global is the default).
+      n_bisect: bits of bisection resolution for the threshold order
+        statistic (sync='global' / masked paths); final bracket width is
+        initial width * 2^-n_bisect.
+      bisect_fanout: thresholds probed per fused bisection round; each round
+        costs ONE collective and shrinks the bracket (fanout+1)x, so 32
+        reaches 26-bit resolution in 6 rounds instead of 26.
+      forecast: carry an EMA forecaster of the dual order statistic in
+        router state and warm-start each bisection with its predicted
+        bracket (validated in-band, so stale forecasts only cost the saved
+        rounds). Reference global path only; adds 'q_ema'/'q_err' state.
+      forecast_decay: EMA decay for the forecaster's mean and error scale.
+      forecast_margin: half-width multiplier on the EMA'd |error| when
+        forming the predicted bracket.
+      forecast_floor: minimum half-width of the predicted bracket (keeps a
+        freshly converged forecaster from proposing a degenerate window).
     """
 
     n_experts: int
@@ -52,6 +67,12 @@ class RouterConfig:
     use_kernel: bool = False
     sync: str = "local"
     data_axes: tuple = ()
+    n_bisect: int = 26
+    bisect_fanout: int = 32
+    forecast: bool = False
+    forecast_decay: float = 0.9
+    forecast_margin: float = 4.0
+    forecast_floor: float = 1e-3
 
     def __post_init__(self):
         if self.strategy not in ("topk", "aux_loss", "lossfree", "bip"):
@@ -62,6 +83,14 @@ class RouterConfig:
             raise ValueError(f"unknown score_fn {self.score_fn!r}")
         if self.sync not in ("local", "global"):
             raise ValueError(f"unknown sync mode {self.sync!r}")
+        if self.n_bisect < 1:
+            raise ValueError(f"n_bisect must be >= 1, got {self.n_bisect}")
+        if self.bisect_fanout < 1:
+            raise ValueError(f"bisect_fanout must be >= 1, got {self.bisect_fanout}")
+        if not (0.0 <= self.forecast_decay < 1.0):
+            raise ValueError(f"forecast_decay must be in [0, 1), got {self.forecast_decay}")
+        if self.forecast_margin <= 0.0 or self.forecast_floor <= 0.0:
+            raise ValueError("forecast_margin and forecast_floor must be > 0")
 
 
 def init_router_state(cfg: RouterConfig) -> Dict[str, Array]:
@@ -70,8 +99,19 @@ def init_router_state(cfg: RouterConfig) -> Dict[str, Array]:
     'q' doubles as the Loss-Free bias vector b (same shape, same role: an
     additive correction that reorders top-k), so checkpoints are strategy
     portable.
+
+    With cfg.forecast on the BIP strategy, the state also carries the dual
+    forecaster: 'q_ema' (EMA of the pre-clamp order statistic t) and
+    'q_err' (EMA of |t - prediction|). Both are (m,) like q, so the
+    generic pytree machinery (tiling into layer stacks, replicated specs,
+    npz checkpoints) covers them with no special cases — and bit-exact
+    checkpoint resume requires them to be saved/restored alongside q.
     """
-    return {"q": jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)}
+    state = {"q": jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)}
+    if cfg.strategy == "bip" and cfg.forecast:
+        state["q_ema"] = jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)
+        state["q_err"] = jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)
+    return state
 
 
 import jax

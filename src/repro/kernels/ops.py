@@ -21,10 +21,28 @@ from repro.kernels import bip_admm as _bip
 from repro.kernels import moe_gemm as _gemm
 from repro.kernels.moe_gemm import _interpret_default
 
+# shard_map replication typing for pallas_call: jax 0.4.x ships no rule, so
+# calling the kernel under shard_map(check_vma/check_rep=True) raises
+# NotImplementedError. The *standard* rule (outputs vary over the union of
+# the inputs' varying axes) is exactly right for a Pallas kernel — it is a
+# per-shard local computation with no collectives inside — and registering
+# it is what makes the collective dual update below legal inside the EP
+# shard_maps (models/moe.py) without disabling replication checking.
+try:  # pragma: no cover - exercised indirectly by the collective tests
+    from jax._src.pallas.pallas_call import pallas_call_p as _pallas_call_p
+    from jax.experimental import shard_map as _shard_map_mod
+
+    _shard_map_mod.register_standard_check(_pallas_call_p)
+    _shard_map_mod.register_standard_rewrite(_pallas_call_p)
+except Exception:  # newer jax versions register their own rule
+    pass
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("top_k", "n_iters", "n_bins", "block_n", "refine", "interpret"),
+    static_argnames=(
+        "top_k", "n_iters", "n_bins", "block_n", "refine", "interpret", "axis_names",
+    ),
 )
 def bip_dual_update(
     s: jnp.ndarray,
@@ -36,6 +54,7 @@ def bip_dual_update(
     block_n: int = 1024,
     refine: int = 1,
     interpret: Optional[bool] = None,
+    axis_names: tuple = (),
 ) -> jnp.ndarray:
     """T fused ADMM iterations on the (n, m) score matrix. Returns q (m,).
 
@@ -43,12 +62,28 @@ def bip_dual_update(
     passes over the located bin (per-expert bounds), so the order-statistic
     resolution is (2/n_bins)^(refine+1)·… ≈ 8e-6 at the defaults — tighter
     than fp32 softmax score gaps (validated in tests/test_kernels.py).
+
+    With `axis_names` (the collective form, sync='global' under shard_map):
+    `s` is the device-local (n_local, m) token shard, the counting pass
+    stays fully local, and the (m, n_bins) histogram counts are psum'd
+    across the mesh axes between the count pass and the rank location —
+    one fused collective per pass, refine+1 per dual iteration — so every
+    device locates the SAME global order statistic. The rank becomes the
+    traced floor(n_glob·k/m) (the bin comparisons accept a tracer), and the
+    q carry starts from the replicated q0 so the result can leave the
+    shard_map under an out_spec of P(None).
     """
     interpret = _interpret_default() if interpret is None else interpret
     n, m = s.shape
-    rank = expert_kth_index(n, top_k, m)
-    if rank < 0:  # capacity slack: constraint never binds
-        return jnp.zeros_like(q0)
+    axis_names = tuple(axis_names)
+    if not axis_names:
+        rank = expert_kth_index(n, top_k, m)
+        if rank < 0:  # capacity slack: constraint never binds
+            return jnp.zeros_like(q0)
+        n_glob = None
+    else:
+        n_glob = lax.psum(jnp.asarray(n, jnp.int32), axis_names)
+        rank = (n_glob * top_k) // m  # traced counterpart of expert_kth_index
 
     def body(_, q):
         lo = jnp.full((m,), _bip.LO, jnp.float32)
@@ -58,14 +93,25 @@ def bip_dual_update(
                 s, q, top_k=top_k, n_bins=n_bins, block_n=block_n,
                 lo=lo, hi=hi, interpret=interpret,
             )
+            if axis_names:
+                cnt = lax.psum(cnt, axis_names)
             cur_lo, cur_hi = lo, hi  # bounds this cnt was computed over
             bin_lo, bin_hi, found = _bip.locate_bin(cnt, rank, n_bins, lo, hi)
             lo = jnp.where(found, bin_lo, lo)
             hi = jnp.where(found, bin_hi, hi)
-        return _bip.q_from_histogram(cnt, rank, n_bins, lo=cur_lo, hi=cur_hi)
+        q_new = _bip.q_from_histogram(cnt, rank, n_bins, lo=cur_lo, hi=cur_hi)
+        if axis_names:
+            # slack capacity (global cap index past the global token count)
+            q_new = jnp.where(rank >= n_glob, jnp.zeros_like(q_new), q_new)
+        return q_new
 
-    # inherit s's varying-manual-axes type for the loop carry (shard_map)
-    q_init = q0.astype(jnp.float32) + 0.0 * s[0].astype(jnp.float32)
+    if axis_names:
+        # the carry must stay REPLICATED: q_new is assembled from psum'd
+        # counts, so starting from the replicated q0 keeps the types aligned
+        q_init = q0.astype(jnp.float32)
+    else:
+        # inherit s's varying-manual-axes type for the loop carry (shard_map)
+        q_init = q0.astype(jnp.float32) + 0.0 * s[0].astype(jnp.float32)
     return lax.fori_loop(0, n_iters, body, q_init)
 
 

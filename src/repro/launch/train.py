@@ -111,6 +111,19 @@ def main(argv=None):
                          "'global' still switches the single-device dual "
                          "solver to the threshold/bisection form (the mesh "
                          "reference numerics, bypassing use_kernel)")
+    ap.add_argument("--n-bisect", type=int, default=None,
+                    help="bits of bisection resolution for the sync='global' "
+                         "dual order statistic (default 26)")
+    ap.add_argument("--bisect-fanout", type=int, default=None,
+                    help="thresholds probed per fused bisection round; one "
+                         "collective per round shrinks the bracket "
+                         "(fanout+1)x (default 32 -> 6 rounds)")
+    ap.add_argument("--forecast", action="store_true",
+                    help="carry the dual forecaster (EMA of the order "
+                         "statistic) in router state and warm-start each "
+                         "bisection with its predicted bracket")
+    ap.add_argument("--forecast-decay", type=float, default=None)
+    ap.add_argument("--forecast-margin", type=float, default=None)
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
@@ -176,12 +189,27 @@ def main(argv=None):
     from repro.training.loop import evaluate_ppl
 
     cfg = configs.reduced_for_smoke(args.arch) if args.reduced else configs.get(args.arch)
-    if args.method or args.bip_iters or args.sync:
+    if (
+        args.method or args.bip_iters or args.sync or args.n_bisect
+        or args.bisect_fanout or args.forecast
+        or args.forecast_decay is not None or args.forecast_margin is not None
+    ):
         routing = dataclasses.replace(
             cfg.routing,
             strategy=args.method or cfg.routing.strategy,
             bip_iters=args.bip_iters or cfg.routing.bip_iters,
             sync=args.sync or cfg.routing.sync,
+            n_bisect=args.n_bisect or cfg.routing.n_bisect,
+            bisect_fanout=args.bisect_fanout or cfg.routing.bisect_fanout,
+            forecast=args.forecast or cfg.routing.forecast,
+            forecast_decay=(
+                cfg.routing.forecast_decay
+                if args.forecast_decay is None else args.forecast_decay
+            ),
+            forecast_margin=(
+                cfg.routing.forecast_margin
+                if args.forecast_margin is None else args.forecast_margin
+            ),
         )
         cfg = dataclasses.replace(cfg, routing=routing)
     if args.bf16:

@@ -66,7 +66,24 @@ def router_config(cfg: ModelConfig, data_axes: Tuple[str, ...] = ()) -> RouterCo
         use_kernel=r.use_kernel,
         sync=r.sync,
         data_axes=data_axes,
+        n_bisect=r.n_bisect,
+        bisect_fanout=r.bisect_fanout,
+        forecast=r.forecast,
+        forecast_decay=r.forecast_decay,
+        forecast_margin=r.forecast_margin,
+        forecast_floor=r.forecast_floor,
     )
+
+
+def _state_specs(router_state):
+    """Replicated PartitionSpec pytree matching the router-state dict.
+
+    Every router-state leaf (q, and the forecaster EMAs when enabled) is
+    (m,) and replicated across the mesh, so the spec tree is P(None)
+    everywhere — built from the live state so new keys never need a
+    hand-written spec.
+    """
+    return jax.tree.map(lambda _: P(None), router_state)
 
 
 def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
@@ -332,13 +349,14 @@ def moe_ffn_ep2d(
         # cfg.routing.sync): identical on every data rank, but all_gather
         # outputs are typed varying-over-data — the pmeans are semantic
         # no-ops (NOT cross-shard dual averaging, every rank already holds
-        # the converged global q) that re-establish replication for check_vma
-        new_q = out.state["q"]
+        # the converged global q / forecaster EMAs) that re-establish
+        # replication for check_vma
+        new_state = out.state
         load = out.metrics["load"]
         dropped = out.metrics["dropped_frac_cap1"]
         aux = out.aux_loss
         if token_sharded:
-            new_q = lax.pmean(new_q, data_axes)
+            new_state = jax.tree.map(lambda v: lax.pmean(v, data_axes), new_state)
             load = lax.pmean(load, data_axes)
             dropped = lax.pmean(dropped, data_axes)
             aux = lax.pmean(aux, data_axes)
@@ -348,7 +366,7 @@ def moe_ffn_ep2d(
             "max_vio": jnp.max(load) / mean_load - 1.0,
             "dropped_frac_cap1": dropped,
         }
-        return y_tok, {"q": new_q}, aux, mets
+        return y_tok, new_state, aux, mets
 
     fn = _shard_map(
         block,
@@ -359,11 +377,11 @@ def moe_ffn_ep2d(
             wf_spec,
             wf_spec,
             wd_spec,
-            {"q": P(None)},
+            _state_specs(router_state),
         ),
         out_specs=(
             x_spec,
-            {"q": P(None)},
+            _state_specs(router_state),
             P(),
             {"load": P(), "max_vio": P(), "dropped_frac_cap1": P()},
         ),
@@ -463,12 +481,15 @@ def moe_ffn_ep2ds(
         y_tok = plan.combine(y, out.combine_weights, expert_offset=rank * m_loc)
         y_tok = lax.psum(y_tok, model_axis)
 
-        # global sync: q converged identically per shard (vma-replicated, no
-        # averaging); local sync: pmean the per-shard duals into the warm start
+        # global sync: the whole state dict (q + forecaster EMAs) converged
+        # identically per shard (vma-replicated, no averaging); local sync:
+        # pmean the per-shard duals into the warm start (forecaster keys
+        # are untouched by the local path and stay replicated)
         if cfg.routing.sync == "global":
-            new_q = out.state["q"]
+            new_state = out.state
         else:
-            new_q = lax.pmean(out.state["q"], data_axes)
+            new_state = dict(out.state)
+            new_state["q"] = lax.pmean(out.state["q"], data_axes)
         load = lax.psum(out.metrics["load"], data_axes)
         mean_load = (n_global * k) / m
         mets = {
@@ -479,7 +500,7 @@ def moe_ffn_ep2ds(
             ),
         }
         aux = lax.pmean(out.aux_loss, data_axes)
-        return y_tok, {"q": new_q}, aux, mets
+        return y_tok, new_state, aux, mets
 
     fn = _shard_map(
         block,
@@ -490,11 +511,11 @@ def moe_ffn_ep2ds(
             wf_spec,
             wf_spec,
             wd_spec,
-            {"q": P(None)},
+            _state_specs(router_state),
         ),
         out_specs=(
             P(data_axes, None),
-            {"q": P(None)},
+            _state_specs(router_state),
             P(),
             {"load": P(), "max_vio": P(), "dropped_frac_cap1": P()},
         ),
@@ -556,10 +577,12 @@ def moe_ffn_ep(
         # router state: sync='global' duals already converged identically on
         # every shard (psum'd order statistics inside route, vma-replicated);
         # sync='local' averages the per-shard duals into the warm start
+        # (forecaster keys are untouched by the local path)
         if data_axes and cfg.routing.sync != "global":
-            new_q = lax.pmean(out.state["q"], data_axes)
+            new_state = dict(out.state)
+            new_state["q"] = lax.pmean(out.state["q"], data_axes)
         else:
-            new_q = out.state["q"]
+            new_state = out.state
         # global balance metrics: sum local loads over data shards
         load = out.metrics["load"]
         dropped = out.metrics["dropped_frac_cap1"]
@@ -574,7 +597,7 @@ def moe_ffn_ep(
             "max_vio": jnp.max(load) / mean_load - 1.0,
             "dropped_frac_cap1": dropped,
         }
-        return y_tok, {"q": new_q}, aux, mets
+        return y_tok, new_state, aux, mets
 
     f = _shard_map(
         block,
@@ -585,11 +608,11 @@ def moe_ffn_ep(
             P(model_axis, None, None),  # w_gate
             P(model_axis, None, None),  # w_up
             P(model_axis, None, None),  # w_down
-            {"q": P(None)},  # router state replicated
+            _state_specs(router_state),  # router state replicated
         ),
         out_specs=(
             P(data_axes if data_axes else None, None),
-            {"q": P(None)},
+            _state_specs(router_state),
             P(),
             {"load": P(), "max_vio": P(), "dropped_frac_cap1": P()},
         ),

@@ -28,17 +28,23 @@ Production shape (DESIGN.md §Training):
   *sequentially* through microbatches (the BIP dual price q updates between
   microbatches, exactly as it would across smaller true steps).
 * **Router dual sync** — `cfg.routing.sync` rides into the compiled sharded
-  step through the model: 'global' makes every BIP gate run the psum'd
-  threshold dual update over the mesh's data axes inside the step
-  (`ref_bip.bip_dual_update_global`), so the carried q is the single-device
-  paper trajectory; 'local' solves per-shard duals and pmean-averages them
-  into the warm start (DESIGN.md §Global-sync). The replicated-q sharding
-  spec (`distributed.sharding.router_state_specs`) is the same either way.
+  step through the model: 'global' makes every BIP gate run the fused
+  multi-threshold dual update with psum'd counts over the mesh's data axes
+  inside the step (`ref_bip.bip_dual_update_global`), so the carried q is
+  the single-device paper trajectory; 'local' solves per-shard duals and
+  pmean-averages them into the warm start (DESIGN.md §Global-sync). The
+  replicated router-state sharding spec
+  (`distributed.sharding.router_state_specs`) is the same either way, and
+  covers every state leaf — including the dual-forecaster EMAs
+  ('q_ema'/'q_err') that `cfg.routing.forecast` adds, which thread through
+  microbatches and steps exactly like q.
 * **Checkpointing** — `train_loop(ckpt_dir=..., ckpt_every=N, resume=True)`
   saves the full TrainState (params, Adam moments, step counter, router
-  states q) through `checkpoint.store` and resumes bit-exactly: the data
-  stream is deterministic per step index, so a restored run replays the
-  remaining schedule on identical batches.
+  states — the dual q plus, under `cfg.routing.forecast`, the forecaster
+  EMAs) through `checkpoint.store` and resumes bit-exactly: the data
+  stream is deterministic per step index and the forecaster state restores
+  with the duals, so a restored run replays the remaining schedule on
+  identical batches with identical warm-start brackets.
 """
 from __future__ import annotations
 

@@ -191,6 +191,153 @@ def test_masked_dual_update_equals_dense_subset(seed, t, frac):
     np.testing.assert_allclose(np.asarray(q_all), np.asarray(q_thr), atol=1e-6)
 
 
+# ------------------------------------------- fused multi-threshold bisection
+
+
+@given(
+    n=st.integers(8, 300),
+    kth=st.integers(0, 40),
+    fanout=st.sampled_from([2, 7, 15, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_fused_fanout_threshold_matches_classic_bisection(n, kth, fanout, seed):
+    """fanout>1 probes F thresholds per fused count and must land on the
+    same order statistic as classic bisection (fanout=1): each within its
+    bracket resolution of the true sort value, and both must keep the
+    partition property (<= kth elements strictly above the threshold)."""
+    kth = min(kth, n - 1)
+    x = np.random.default_rng(seed).standard_normal((n,)).astype(np.float32)
+    want = np.sort(x)[::-1][kth]
+    for f in (1, fanout):
+        thr = np.asarray(
+            kth_largest_threshold(jnp.asarray(x), kth, n_bisect=26, fanout=f)
+        )
+        assert int((x > thr).sum()) <= kth, (f, thr, want)
+        np.testing.assert_allclose(thr, want, atol=2e-5, err_msg=f"fanout={f}")
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    fanout=st.sampled_from([1, 4, 32]),
+    good=st.sampled_from([True, False]),
+)
+@settings(max_examples=25, deadline=None)
+def test_forecast_window_valid_and_stale(seed, fanout, good):
+    """A valid predicted bracket must not change the answer (it only
+    tightens round 0); a stale bracket — shifted entirely off the
+    statistic — must fail the in-round validity check (count(w_lo) > kth
+    >= count(w_hi)) and fall back to the full range, also unchanged."""
+    rng = np.random.default_rng(seed)
+    n, kth = 200, 10
+    x = rng.standard_normal((n,)).astype(np.float32)
+    want = np.sort(x)[::-1][kth]
+    if good:
+        w = (jnp.float32(want - 0.05), jnp.float32(want + 0.05))
+    else:
+        w = (jnp.float32(want + 1.0), jnp.float32(want + 2.0))
+    thr = np.asarray(
+        kth_largest_threshold(
+            jnp.asarray(x), kth, n_bisect=26, fanout=fanout, window=w
+        )
+    )
+    assert int((x > thr).sum()) <= kth
+    np.testing.assert_allclose(thr, want, atol=2e-5)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    t=st.sampled_from([2, 4]),
+    fanout=st.sampled_from([2, 8, 32]),
+)
+@settings(max_examples=15, deadline=None)
+def test_global_dual_fused_fanout_matches_sort_oracle(seed, t, fanout):
+    """The production sync='global' configuration — fanout>1, static
+    softmax score bounds, cold forecaster window (zeros: stale, must be
+    ignored) — tracks the sort-based oracle across warm-started duals."""
+    rng = np.random.default_rng(seed)
+    n, m, k = 256, 16, 4
+    s = _scores(rng, n, m, skew=1.5)
+    q0 = jnp.asarray(rng.uniform(0, 0.1, (m,)).astype(np.float32))
+    q_ref, p_ref = bip_dual_update(s, q0, top_k=k, n_iters=t)
+    zeros = jnp.zeros((m,), jnp.float32)
+    q_g, p_g = bip_dual_update_global(
+        s, q0, top_k=k, n_iters=t, n_bisect=26, fanout=fanout,
+        score_bounds=(0.0, 1.0), window=(zeros, zeros),
+    )
+    np.testing.assert_allclose(np.asarray(q_g), np.asarray(q_ref), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(p_g), np.asarray(p_ref), atol=3e-5)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    fanout=st.sampled_from([4, 32]),
+    frac=st.floats(0.2, 0.9),
+)
+@settings(max_examples=15, deadline=None)
+def test_masked_dual_update_fanout_matches_dense_subset(seed, fanout, frac):
+    """Fused fanout composes with the token mask (the serving path): the
+    masked update at fanout>1 still equals the sort-based update over just
+    the real rows."""
+    rng = np.random.default_rng(seed)
+    n, m, k = 192, 8, 2
+    s = _scores(rng, n, m, skew=1.0)
+    q0 = jnp.asarray(rng.uniform(0, 0.2, (m,)).astype(np.float32))
+    mask = rng.random(n) < frac
+    mask[0] = True
+    q_m, _ = bip_dual_update_masked(
+        s, q0, jnp.asarray(mask), top_k=k, n_iters=2, n_bisect=26, fanout=fanout
+    )
+    q_dense, _ = bip_dual_update(
+        jnp.asarray(np.asarray(s)[mask]), q0, top_k=k, n_iters=2
+    )
+    np.testing.assert_allclose(np.asarray(q_m), np.asarray(q_dense), atol=3e-5)
+
+
+def test_global_dual_with_stats_returns_preclamp_statistic():
+    """with_stats=True returns the pre-clamp order statistic t consistent
+    with q = max(0, t), and leaves the (q, p) values unchanged — the
+    forecaster EMA update in route() relies on both."""
+    rng = np.random.default_rng(13)
+    n, m, k = 256, 16, 4
+    s = _scores(rng, n, m, skew=1.5)
+    q0 = jnp.zeros((m,))
+    q2, p2 = bip_dual_update_global(s, q0, top_k=k, n_iters=4, fanout=32,
+                                    score_bounds=(0.0, 1.0))
+    q3, p3, t3 = bip_dual_update_global(s, q0, top_k=k, n_iters=4, fanout=32,
+                                        score_bounds=(0.0, 1.0), with_stats=True)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q3))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p3))
+    np.testing.assert_array_equal(
+        np.asarray(q3), np.maximum(0.0, np.asarray(t3))
+    )
+
+
+def test_forecast_route_state_evolves_and_preserves_duals():
+    """route(sync='global', forecast=True) must carry 'q_ema'/'q_err' in
+    its state, update them every call, and leave the dual trajectory
+    within bisection resolution of the forecast-off path."""
+    rng = np.random.default_rng(14)
+    n, m, k = 256, 8, 2
+    cfg_on = RouterConfig(n_experts=m, top_k=k, strategy="bip", bip_iters=4,
+                          sync="global", forecast=True)
+    cfg_off = RouterConfig(n_experts=m, top_k=k, strategy="bip", bip_iters=4,
+                           sync="global")
+    st_on, st_off = init_router_state(cfg_on), init_router_state(cfg_off)
+    assert set(st_on) == {"q", "q_ema", "q_err"}
+    for step in range(5):
+        logits = jnp.asarray(
+            (rng.standard_normal((n, m))
+             + 1.5 * np.linspace(2, -2, m)[None, :]).astype(np.float32))
+        st_on = route(logits, st_on, cfg_on).state
+        st_off = route(logits, st_off, cfg_off).state
+        np.testing.assert_allclose(
+            np.asarray(st_on["q"]), np.asarray(st_off["q"]), atol=1e-6,
+            err_msg=f"step {step}: forecast warm-start perturbed the dual")
+    assert float(jnp.abs(st_on["q_ema"]).max()) > 0.0
+    assert float(jnp.abs(st_on["q_err"]).max()) > 0.0
+
+
 def test_global_dual_update_single_shard_matches_sort_oracle():
     """bip_dual_update_global with axis_names=() and no mask reproduces the
     independent sort-based oracle up to bisection resolution (the

@@ -87,6 +87,71 @@ def test_bip_kernel_in_router_end_to_end():
     assert abs(float(out_k.metrics["max_vio"]) - float(out_r.metrics["max_vio"])) < 0.2
 
 
+def test_route_global_kernel_single_device_matches_kernel_dual():
+    """route(use_kernel=True, sync='global') off-mesh carries the kernel's
+    duals (the collective branch with axis_names=()), not the threshold
+    solver's."""
+    from repro.core import RouterConfig, init_router_state, route
+
+    logits = jnp.asarray(
+        np.random.default_rng(5).standard_normal((512, 16)).astype(np.float32)
+        + 1.5 * np.linspace(2, -2, 16)[None, :]
+    )
+    cfg = RouterConfig(
+        n_experts=16, top_k=4, strategy="bip", bip_iters=4,
+        sync="global", use_kernel=True,
+    )
+    out = route(logits, init_router_state(cfg), cfg)
+    s = jax.nn.softmax(logits, axis=-1)
+    q_direct = ops.bip_dual_update(
+        jax.lax.stop_gradient(s), jnp.zeros((16,)), top_k=4, n_iters=4
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.state["q"]), np.asarray(q_direct), atol=1e-7
+    )
+
+
+def test_bip_kernel_collective_matches_reference_on_mesh():
+    """Collective kernel (psum'd histogram counts) on a forced 4x2 mesh:
+    q must be BITWISE equal to the single-device kernel on the gathered
+    batch (the global histogram is identical — small exact integers), and
+    within histogram resolution of the reference global dual."""
+    from _forced_devices import PRELUDE, run_code as _run
+
+    _run(PRELUDE + r"""
+from repro.core.ref_bip import bip_dual_update_global
+from repro.kernels import ops
+from repro.models.moe import _shard_map
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+
+for n, m, k, t in ((512, 16, 4, 4), (1024, 64, 8, 2)):
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((n, m)) + 1.5 * np.linspace(2, -2, m)[None, :]
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    s = jnp.asarray((e / e.sum(-1, keepdims=True)).astype(np.float32))
+    q0 = jnp.zeros((m,), jnp.float32)
+
+    def collective(s_loc, q, k=k, t=t):
+        return ops.bip_dual_update(s_loc, q, top_k=k, n_iters=t,
+                                   axis_names=("data",))
+
+    fn = _shard_map(collective, mesh=mesh,
+                    in_specs=(P("data", None), P(None)), out_specs=P(None))
+    with mesh:
+        q_mesh = np.asarray(jax.device_get(jax.jit(fn)(s, q0)))
+
+    q_single = np.asarray(ops.bip_dual_update(s, q0, top_k=k, n_iters=t))
+    np.testing.assert_array_equal(q_mesh, q_single,
+                                  err_msg=f"m={m}: mesh vs single kernel")
+
+    q_ref, _ = bip_dual_update_global(s, q0, top_k=k, n_iters=t, n_bisect=40)
+    np.testing.assert_allclose(q_mesh, np.asarray(q_ref), atol=2.0 / 512 + 5e-3,
+                               err_msg=f"m={m}: mesh kernel vs reference")
+print("OK")
+""")
+
+
 def test_bip_kernel_capacity_slack():
     """k >= m: the token constraint selects everything and the capacity
     index runs past the column length -> q stays zero (true slack)."""
