@@ -15,12 +15,18 @@ Two measurements (DESIGN.md §Serving):
    tokens/s, step count, and the per-expert load histogram accumulated over
    every serve step — the BIP router should keep MaxVio small even though
    prefill chunks and single decode tokens share each router invocation.
+   With ``--deadline-ms`` / ``--queue-timeout-ms`` the same stream also
+   measures overload degradation (DESIGN.md §Robustness): deadline-miss
+   rate and shed/timeout count ride along in the output, so "how gracefully
+   does it fail" is benchmarked next to "how fast does it go".
 
-Prints ``name,us_per_call,derived`` CSV lines per the repo contract.
+Prints ``name,us_per_call,derived`` CSV lines per the repo contract;
+``--out-json`` additionally writes the BENCH_serve_throughput record.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -90,6 +96,19 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=100.0, help="Poisson req/s")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    # robustness / overload knobs (DESIGN.md §Robustness)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget for the Poisson stream")
+    ap.add_argument("--queue-timeout-ms", type=float, default=None,
+                    help="max admission wait before a request times out")
+    ap.add_argument("--shed-on-full", action="store_true",
+                    help="shed oldest waiting request instead of refusing "
+                         "new submissions under backpressure")
+    ap.add_argument("--out-json", default=None,
+                    help="write the BENCH_serve_throughput record here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: report everything but do not gate on "
+                         "the >=5x prefill-speedup acceptance")
     args = ap.parse_args(argv)
 
     import jax.numpy as jnp
@@ -131,6 +150,13 @@ def main(argv=None):
         chunk_size=args.chunk,
         max_seq_len=args.max_seq_len,
         seed=args.seed,
+        default_deadline=(
+            args.deadline_ms / 1e3 if args.deadline_ms else None
+        ),
+        queue_timeout=(
+            args.queue_timeout_ms / 1e3 if args.queue_timeout_ms else None
+        ),
+        shed_on_full=args.shed_on_full,
     )
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
     reqs = []
@@ -148,6 +174,7 @@ def main(argv=None):
     eng.prefill_tokens = eng.decode_tokens = 0
     eng.expert_load[:] = 0
     eng.max_vio_per_step.clear()
+    eng.n_deadline_missed = eng.n_shed = 0
 
     t0 = time.perf_counter()
     pending = list(reqs)
@@ -168,12 +195,47 @@ def main(argv=None):
     total = eng.prefill_tokens + eng.decode_tokens
     print(f"serve_stream,{1e6 * wall / max(total, 1):.2f},"
           f"{total / wall:.0f} tok/s ({n_done} reqs, {eng.n_steps} steps)")
+    miss_rate = eng.n_deadline_missed / max(args.requests, 1)
+    print(f"serve_deadline_miss_rate,,{miss_rate:.3f} "
+          f"({eng.n_deadline_missed}/{args.requests})")
+    print(f"serve_shed,,{eng.n_shed}")
+    maxvio = None
     if cfg.is_moe:
         load = eng.expert_load
         mean = max(load.mean(), 1e-9)
-        print(f"serve_expert_maxvio,,{load.max() / mean - 1.0:.3f}")
+        maxvio = load.max() / mean - 1.0
+        print(f"serve_expert_maxvio,,{maxvio:.3f}")
         print("serve_expert_load,," + "|".join(f"{x:.0f}" for x in load))
-    return 0 if speedup >= 5.0 else 1
+
+    if args.out_json:
+        record = {
+            "bench": "serve_throughput",
+            "arch": args.arch,
+            "reduced": args.reduced,
+            "n_slots": args.n_slots,
+            "chunk": args.chunk,
+            "requests": args.requests,
+            "rate": args.rate,
+            "prefill_per_token_tps": tps_seed,
+            "prefill_chunked_tps": tps_chunk,
+            "prefill_speedup": speedup,
+            "serve_tps": total / wall,
+            "serve_steps": eng.n_steps,
+            "serve_wall_s": wall,
+            "n_completed": n_done,
+            # overload degradation (DESIGN.md §Robustness)
+            "deadline_ms": args.deadline_ms,
+            "queue_timeout_ms": args.queue_timeout_ms,
+            "shed_on_full": args.shed_on_full,
+            "n_deadline_missed": eng.n_deadline_missed,
+            "deadline_miss_rate": miss_rate,
+            "n_shed": eng.n_shed,
+            "expert_maxvio": maxvio,
+        }
+        with open(args.out_json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {args.out_json}")
+    return 0 if args.smoke or speedup >= 5.0 else 1
 
 
 if __name__ == "__main__":

@@ -1,4 +1,18 @@
-"""repro.checkpoint — pytree <-> npz persistence."""
-from repro.checkpoint.store import load_pytree, save_pytree, latest_step, CheckpointManager
+"""repro.checkpoint — pytree <-> npz persistence with integrity checks."""
+from repro.checkpoint.store import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    latest_step,
+    load_pytree,
+    save_pytree,
+    verify_checkpoint,
+)
 
-__all__ = ["CheckpointManager", "latest_step", "load_pytree", "save_pytree"]
+__all__ = [
+    "CheckpointCorruptError",
+    "CheckpointManager",
+    "latest_step",
+    "load_pytree",
+    "save_pytree",
+    "verify_checkpoint",
+]

@@ -17,6 +17,15 @@ checkpoints land in step order.
 Data-stream cursors (`data/loader.py` state_dict) ride in a JSON sidecar
 `step_N.data.json` next to the TrainState npz, kept/garbage-collected as
 one unit with it.
+
+Integrity (DESIGN.md §Robustness): every leaf's crc32 is recorded in the
+npz meta at save time and re-checked by `load_pytree(..., verify=True)`;
+the manager additionally writes a `step_N.manifest.json` sidecar (file
+size + whole-file crc32) so truncation/bitrot is detectable WITHOUT
+parsing the archive. `restore(step=None)` walks checkpoints newest-first
+and returns the newest one that deep-verifies; `_gc` counts only
+manifest-valid checkpoints toward `keep`, so a corrupt in-flight save can
+never evict the last good state.
 """
 from __future__ import annotations
 
@@ -24,13 +33,19 @@ import json
 import os
 import re
 import threading
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SEP = "|"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (crc/size mismatch, or
+    the npz itself is unreadable)."""
 
 
 def _flatten(tree, prefix=""):
@@ -93,6 +108,11 @@ def save_pytree(path: str, tree: Any) -> None:
         else:
             arrays[name] = arr
             meta[name] = {"path": key, "dtype": str(arr.dtype)}
+        # per-leaf integrity: crc32 of the stored (viewed) bytes — checked
+        # by load_pytree(verify=True) after the zip layer's own checks
+        meta[name]["crc32"] = zlib.crc32(
+            np.ascontiguousarray(arrays[name]).tobytes()
+        )
     arrays["__meta__"] = np.frombuffer(
         json.dumps(meta).encode("utf-8"), dtype=np.uint8
     )
@@ -101,22 +121,41 @@ def save_pytree(path: str, tree: Any) -> None:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
 
 
-def load_pytree(path: str) -> Any:
-    with np.load(path) as z:
-        meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
-        root: Dict = {}
-        items = []
-        for name, info in meta.items():
-            if info["dtype"] == "NoneType":
-                items.append((info["path"], None))
-                continue
-            arr = z[name]
-            if info["dtype"] == "bfloat16":
-                arr = arr.view(jnp.bfloat16)
-            items.append((info["path"], arr))
+def load_pytree(path: str, verify: bool = False) -> Any:
+    """Load a saved pytree. With verify=True, every leaf whose save
+    recorded a crc32 is re-checked; any mismatch (or an unreadable npz)
+    raises CheckpointCorruptError instead of silently restoring garbage."""
+    try:
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+            items = []
+            for name, info in meta.items():
+                if info["dtype"] == "NoneType":
+                    items.append((info["path"], None))
+                    continue
+                arr = z[name]
+                if verify and "crc32" in info:
+                    crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                    if crc != info["crc32"]:
+                        raise CheckpointCorruptError(
+                            f"{path}: leaf {info['path']!r} crc mismatch "
+                            f"(stored {info['crc32']}, computed {crc})"
+                        )
+                if info["dtype"] == "bfloat16":
+                    arr = arr.view(jnp.bfloat16)
+                items.append((info["path"], arr))
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        if verify:
+            # zipfile/np.load-level damage (truncation, bad zip crc, ...)
+            raise CheckpointCorruptError(f"{path}: unreadable npz ({e})") from e
+        raise
     # rebuild: parse path segments "tag:key"
     tree: Any = None
     parsed = []
@@ -151,19 +190,94 @@ def _fix_tuples(tree, parsed):
     return walk(tree, ())
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def checkpoint_steps(ckpt_dir: str) -> List[int]:
+    """All step indices with a step_N.npz present, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(m.group(1))
         for f in os.listdir(ckpt_dir)
         if (m := re.match(r"step_(\d+)\.npz$", f))
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = checkpoint_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+# ------------------------------------------------------------- integrity
+
+
+def _file_crc32(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while block := f.read(chunk):
+            crc = zlib.crc32(block, crc)
+    return crc
+
+
+def _manifest_path(npz_path: str) -> str:
+    return re.sub(r"\.npz$", ".manifest.json", npz_path)
+
+
+def write_manifest(npz_path: str) -> str:
+    """Record the finished npz's size + whole-file crc32 in an (atomic,
+    fsync'd) sidecar, so later readers can detect truncation/bitrot
+    without parsing the archive."""
+    manifest = {
+        "version": 1,
+        "file": os.path.basename(npz_path),
+        "size": os.path.getsize(npz_path),
+        "crc32": _file_crc32(npz_path),
+    }
+    out = _manifest_path(npz_path)
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, out)
+    return out
+
+
+def manifest_valid(npz_path: str) -> Optional[bool]:
+    """Cheap integrity check against the manifest sidecar: False on
+    size/crc mismatch (or missing npz), True on match, None when no
+    manifest exists (pre-integrity checkpoint — unknown, caller decides)."""
+    mpath = _manifest_path(npz_path)
+    if not os.path.exists(mpath):
+        return None
+    try:
+        with open(mpath) as f:
+            m = json.load(f)
+        if os.path.getsize(npz_path) != m["size"]:
+            return False
+        return _file_crc32(npz_path) == m["crc32"]
+    except (OSError, ValueError, KeyError):
+        return False
+
+
+def verify_checkpoint(npz_path: str, deep: bool = False) -> bool:
+    """True when the checkpoint passes integrity checks. Shallow = manifest
+    size+crc (missing manifest counts as pass, for pre-integrity files);
+    deep additionally re-reads every leaf against its stored crc32."""
+    if not os.path.exists(npz_path):
+        return False
+    if manifest_valid(npz_path) is False:
+        return False
+    if deep:
+        try:
+            load_pytree(npz_path, verify=True)
+        except CheckpointCorruptError:
+            return False
+    return True
 
 
 class CheckpointManager:
-    """Keeps the most recent `keep` checkpoints under `dir/step_N.npz`."""
+    """Keeps the most recent `keep` *valid* checkpoints under
+    `dir/step_N.npz` (validity = manifest size/crc; a corrupt later save
+    never counts toward `keep`, so GC cannot evict the last good state)."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.dir = ckpt_dir
@@ -172,9 +286,13 @@ class CheckpointManager:
         self._writer_err: Optional[BaseException] = None
         os.makedirs(ckpt_dir, exist_ok=True)
 
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step}.npz")
+
     def save(self, step: int, tree: Any) -> str:
-        path = os.path.join(self.dir, f"step_{step}.npz")
+        path = self._path(step)
         save_pytree(path, tree)
+        write_manifest(path)
         self._gc()
         return path
 
@@ -188,11 +306,42 @@ class CheckpointManager:
             raise err
 
     def restore(self, step: Optional[int] = None) -> Tuple[int, Any]:
+        """Load a checkpoint, deep-verifying integrity. With an explicit
+        `step`, corruption raises CheckpointCorruptError; with step=None
+        the manager walks newest -> oldest and returns the newest VALID
+        checkpoint, so a truncated/bit-flipped latest save degrades to the
+        previous good state instead of killing the run."""
         self.wait()  # an in-flight async write may hold the newest step
-        step = step if step is not None else latest_step(self.dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        return step, load_pytree(os.path.join(self.dir, f"step_{step}.npz"))
+        if step is not None:
+            return step, self._verified_load(self._path(step))
+        last_err: Optional[BaseException] = None
+        for s in reversed(checkpoint_steps(self.dir)):
+            try:
+                return s, self._verified_load(self._path(s))
+            except CheckpointCorruptError as e:
+                last_err = e
+                import warnings
+
+                warnings.warn(
+                    f"checkpoint step_{s}.npz failed verification "
+                    f"({e}); falling back to the previous checkpoint"
+                )
+        if last_err is not None:
+            raise CheckpointCorruptError(
+                f"no valid checkpoint in {self.dir}"
+            ) from last_err
+        raise FileNotFoundError(f"no checkpoints in {self.dir}")
+
+    def _verified_load(self, path: str) -> Any:
+        """Manifest (whole-file size+crc) check, then leaf-crc verifying
+        load. The manifest catches damage the npz layers can miss (e.g. a
+        flip inside an npy member header, which neither the zip member crc
+        nor the leaf crcs cover)."""
+        if manifest_valid(path) is False:
+            raise CheckpointCorruptError(
+                f"{path}: manifest size/crc mismatch (truncated or bit-rotted)"
+            )
+        return load_pytree(path, verify=True)
 
     # ------------------------------------------------- full training state
 
@@ -215,9 +364,10 @@ class CheckpointManager:
             "opt_state": state.opt_state,
             "router_states": state.router_states,
         }
-        path = os.path.join(self.dir, f"step_{step}.npz")
+        path = self._path(step)
         if block:
             save_pytree(path, tree)
+            write_manifest(path)
             self._write_data_state(step, data_state)
             self._gc()
             return path
@@ -239,6 +389,7 @@ class CheckpointManager:
         def write():
             try:
                 save_pytree(path, snap)
+                write_manifest(path)
                 self._write_data_state(step, data_state)
                 self._gc()
             except BaseException as e:  # re-raised at the next wait()
@@ -256,6 +407,8 @@ class CheckpointManager:
         tmp = os.path.join(self.dir, f".step_{step}.data.json.tmp")
         with open(tmp, "w") as f:
             json.dump(data_state, f)
+            f.flush()
+            os.fsync(f.fileno())  # durable before the rename publishes it
         os.replace(tmp, os.path.join(self.dir, f"step_{step}.data.json"))
 
     def restore_data_state(self, step: Optional[int] = None) -> Optional[Dict]:
@@ -285,13 +438,23 @@ class CheckpointManager:
         )
 
     def _gc(self):
-        steps = sorted(
-            int(m.group(1))
-            for f in os.listdir(self.dir)
-            if (m := re.match(r"step_(\d+)\.npz$", f))
-        )
-        for s in steps[: -self.keep]:
-            os.remove(os.path.join(self.dir, f"step_{s}.npz"))
-            sidecar = os.path.join(self.dir, f"step_{s}.data.json")
-            if os.path.exists(sidecar):
-                os.remove(sidecar)
+        """Delete checkpoints older than the newest `keep` VALID ones.
+
+        Validity is the cheap manifest check (missing manifest = legacy
+        file, counted as valid). Walking newest->oldest and deleting only
+        once `keep` valid checkpoints are newer guarantees that a corrupt
+        later save — e.g. an async write that will fail verification —
+        can never cause the eviction of the only good checkpoint."""
+        n_valid = 0
+        for s in reversed(checkpoint_steps(self.dir)):
+            path = self._path(s)
+            if n_valid >= self.keep:
+                os.remove(path)
+                for sidecar in (
+                    os.path.join(self.dir, f"step_{s}.data.json"),
+                    _manifest_path(path),
+                ):
+                    if os.path.exists(sidecar):
+                        os.remove(sidecar)
+            elif manifest_valid(path) is not False:
+                n_valid += 1

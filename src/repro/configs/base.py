@@ -45,6 +45,10 @@ class RoutingSpec:
     forecast_decay: float = 0.9    # EMA decay for the statistic and its error
     forecast_margin: float = 4.0   # bracket half-width = margin·EMA|err| + floor
     forecast_floor: float = 1e-3
+    # dual-health watchdog: reset a layer's carried q / forecaster EMAs to
+    # safe init when any entry is non-finite or |q| > dual_abs_limit
+    guard_duals: bool = False
+    dual_abs_limit: float = 100.0
     # expert-parallel implementation (DESIGN.md §6 / EXPERIMENTS.md §Perf):
     # 'ep2d' gathers activations, weights stay (experts->model, f->data)
     #        sharded; routing sees the full microbatch (paper-global duals).

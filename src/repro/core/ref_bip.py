@@ -467,3 +467,17 @@ def bip_dual_update_masked(
         s, q0, top_k=top_k, n_iters=n_iters,
         token_mask=mask, axis_names=(), n_bisect=n_bisect, fanout=fanout,
     )
+
+
+def sanitize_duals(q: jnp.ndarray, abs_limit: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dual-health check: (q_safe, healthy) for a carried dual vector.
+
+    `healthy` is a scalar bool — True iff every entry of q is finite and
+    |q| stays under `abs_limit`. When unhealthy, q_safe is the zeros safe
+    init (the warm start any fresh layer would use); when healthy, q_safe
+    IS q (jnp.where on the scalar keeps healthy values bitwise unchanged).
+    Used by the router watchdog (RouterConfig.guard_duals) so one poisoned
+    batch cannot permanently corrupt a layer's carried prices.
+    """
+    healthy = jnp.all(jnp.isfinite(q) & (jnp.abs(q) <= abs_limit))
+    return jnp.where(healthy, q, jnp.zeros_like(q)), healthy

@@ -246,6 +246,23 @@ def route(
     # the router-state pytree structure is stable across scan/loop carries
     new_state = dict(state)
 
+    if cfg.guard_duals:
+        # dual-health watchdog: q and the forecaster EMAs are one coupled
+        # carry, so any non-finite/runaway entry in any of them resets the
+        # whole layer to safe init (zeros — the fresh-layer warm start).
+        # jnp.where on the scalar verdict keeps healthy carries bitwise
+        # unchanged, so the watchdog is free to leave enabled.
+        fkeys = [k for k in ("q_ema", "q_err") if k in state]
+        stacked = jnp.concatenate([q0] + [state[k] for k in fkeys]) if fkeys else q0
+        _, dual_healthy = ref_bip.sanitize_duals(stacked, cfg.dual_abs_limit)
+        q0 = jnp.where(dual_healthy, q0, jnp.zeros_like(q0))
+        for k in fkeys:
+            new_state[k] = jnp.where(
+                dual_healthy, state[k], jnp.zeros_like(state[k])
+            )
+        state = new_state  # the forecaster below must read the sanitized carry
+        new_q = q0
+
     # sync='global': the dual update runs with psum-reduced counts over the
     # data axes, so q converges identically on every shard (DESIGN.md
     # §Global-sync). Empty data_axes (single device, or a caller outside

@@ -52,6 +52,14 @@ class RouterConfig:
         forming the predicted bracket.
       forecast_floor: minimum half-width of the predicted bracket (keeps a
         freshly converged forecaster from proposing a degenerate window).
+      guard_duals: dual-health watchdog (DESIGN.md §Robustness): before each
+        update, reset a layer's carried state (q, and the forecaster EMAs
+        when present) to safe init if any entry is non-finite or exceeds
+        dual_abs_limit in magnitude. Healthy values pass through bitwise
+        unchanged, so enabling the watchdog does not perturb a healthy run.
+      dual_abs_limit: |q| runaway threshold for guard_duals. Softmax scores
+        live in [0, 1] and useful duals in roughly [-1, 1], so the default
+        is far outside any trajectory a healthy run produces.
     """
 
     n_experts: int
@@ -73,6 +81,8 @@ class RouterConfig:
     forecast_decay: float = 0.9
     forecast_margin: float = 4.0
     forecast_floor: float = 1e-3
+    guard_duals: bool = False
+    dual_abs_limit: float = 100.0
 
     def __post_init__(self):
         if self.strategy not in ("topk", "aux_loss", "lossfree", "bip"):
@@ -91,6 +101,10 @@ class RouterConfig:
             raise ValueError(f"forecast_decay must be in [0, 1), got {self.forecast_decay}")
         if self.forecast_margin <= 0.0 or self.forecast_floor <= 0.0:
             raise ValueError("forecast_margin and forecast_floor must be > 0")
+        if self.dual_abs_limit <= 0.0:
+            raise ValueError(
+                f"dual_abs_limit must be > 0, got {self.dual_abs_limit}"
+            )
 
 
 def init_router_state(cfg: RouterConfig) -> Dict[str, Array]:

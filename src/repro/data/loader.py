@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import glob as _glob
 import os
+import time
 from typing import Dict, Iterator, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -72,6 +73,17 @@ class ShardedTextLoader:
     deterministic per-epoch seed); a finite epoch count flushes the packer
     at the end and drops the final sub-batch-size remainder (static batch
     shapes keep the jit cache to one entry).
+
+    I/O robustness (DESIGN.md §Robustness): transient shard open/read
+    errors are retried with exponential backoff — up to `io_retries`
+    CONSECUTIVE failures (any successful read resets the streak) before
+    the error propagates. A failed handle is reopened and re-seeked to
+    `_byte_offset`, which always points at the start of the next unread
+    line, so retries never skip or duplicate a document. Undecodable
+    .jsonl lines are skipped (their document index is still consumed, so
+    every rank skips the same line and rank sharding stays aligned). Both
+    pathologies are counted and the counters ride in `state_dict()`.
+    `open_fn` is injectable for fault-injection tests (robustness.faults).
     """
 
     def __init__(
@@ -87,6 +99,9 @@ class ShardedTextLoader:
         shuffle_buffer: int = 64,
         seed: int = 0,
         epochs: Optional[int] = None,
+        io_retries: int = 3,
+        io_backoff: float = 0.05,
+        open_fn=None,
     ):
         assert 0 <= rank < world_size
         self.shards = [str(p) for p in shards]
@@ -99,7 +114,13 @@ class ShardedTextLoader:
         self.shuffle_buffer = max(1, shuffle_buffer)
         self.seed = seed
         self.epochs = epochs
+        self.io_retries = max(0, io_retries)
+        self.io_backoff = io_backoff
+        self._open_fn = open_fn if open_fn is not None else open
 
+        self._n_io_retries = 0     # transient open/read failures retried
+        self._n_skipped_lines = 0  # undecodable .jsonl lines dropped
+        self._io_streak = 0        # consecutive failures (resets on success)
         self._epoch = 0
         self._file_idx = 0
         self._byte_offset = 0
@@ -119,15 +140,39 @@ class ShardedTextLoader:
 
     def _open(self):
         if self._fh is None and self._file_idx < len(self.shards):
-            self._fh = open(self.shards[self._file_idx], "r", encoding="utf-8")
-            self._fh.seek(self._byte_offset)
+            fh = self._open_fn(self.shards[self._file_idx], "r", encoding="utf-8")
+            fh.seek(self._byte_offset)
+            self._fh = fh
+            self._io_streak = 0  # a successful open is progress too
         return self._fh
+
+    def _io_retry_or_raise(self, err: OSError) -> None:
+        """Transient open/read failure: drop the handle, back off, let the
+        caller re-attempt (the reopen seeks to `_byte_offset`, the start of
+        the next unread line). Raises after `io_retries` CONSECUTIVE
+        failures — any successful read resets the streak."""
+        if self._fh is not None:
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+            self._fh = None
+        self._io_streak += 1
+        if self._io_streak > self.io_retries:
+            raise err
+        self._n_io_retries += 1
+        if self.io_backoff > 0:
+            time.sleep(self.io_backoff * (2 ** (self._io_streak - 1)))
 
     def _next_rank_doc(self) -> Optional[List[int]]:
         """Next tokenized document owned by this rank, advancing the cursor;
         None at end of the final allowed epoch."""
         while True:
-            fh = self._open()
+            try:
+                fh = self._open()
+            except OSError as e:
+                self._io_retry_or_raise(e)
+                continue
             if fh is None:  # epoch exhausted
                 if self.epochs is not None and self._epoch + 1 >= self.epochs:
                     return None
@@ -137,7 +182,12 @@ class ShardedTextLoader:
                 self._doc_count = 0
                 self._rng = np.random.default_rng(self._epoch_seed(self._epoch))
                 continue
-            line = fh.readline()
+            try:
+                line = fh.readline()
+            except OSError as e:
+                self._io_retry_or_raise(e)
+                continue
+            self._io_streak = 0
             if not line:
                 fh.close()
                 self._fh = None
@@ -151,7 +201,14 @@ class ShardedTextLoader:
             self._doc_count += 1
             if idx % self.world_size != self.rank:
                 continue  # another rank's document: skip without parsing
-            text = parse_doc_line(self.shards[self._file_idx], line)
+            try:
+                text = parse_doc_line(self.shards[self._file_idx], line)
+            except (ValueError, KeyError, TypeError):
+                # undecodable line (corrupt JSON / wrong schema): its index
+                # was already consumed above, so every rank of any world
+                # size skips this exact line — sharding stays aligned
+                self._n_skipped_lines += 1
+                continue
             ids = self.tokenizer.encode(text)
             if ids:
                 return ids
@@ -207,6 +264,8 @@ class ShardedTextLoader:
             ],
             "batches_emitted": self._batches_emitted,
             "exhausted": self._exhausted,
+            "io_retries": self._n_io_retries,
+            "skipped_lines": self._n_skipped_lines,
         }
 
     def load_state_dict(self, state: Dict) -> None:
@@ -231,3 +290,7 @@ class ShardedTextLoader:
         ]
         self._batches_emitted = int(state["batches_emitted"])
         self._exhausted = bool(state["exhausted"])
+        # .get: counters were added after version 1 shipped; absent = 0
+        self._n_io_retries = int(state.get("io_retries", 0))
+        self._n_skipped_lines = int(state.get("skipped_lines", 0))
+        self._io_streak = 0

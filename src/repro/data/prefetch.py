@@ -16,6 +16,15 @@ read-ahead batches sitting in the queue.
 `close()` (or the context manager / generator-close path) stops the
 producer even if it is blocked on a full queue, and joins the thread —
 early-stopping consumers never leak a thread.
+
+Robustness (DESIGN.md §Robustness): `retries` gives the producer a
+consecutive-failure budget — a crash mid-pull re-`iter()`s the wrapped
+stream (which resumes from its own cursor) instead of killing the run;
+the budget resets on every successful batch. Calling `next()` on an
+iterator after `close()` raises a clear RuntimeError instead of blocking
+forever on the drained queue; a FRESH `__iter__()` after close re-arms
+the queue and producer, which is how train_loop resumes the stream after
+a rollback (close -> load_state_dict -> iter).
 """
 from __future__ import annotations
 
@@ -29,18 +38,27 @@ _SENTINEL = object()
 class Prefetcher:
     """Wrap a BatchStream with a depth-bounded background producer."""
 
-    def __init__(self, stream, depth: int = 2, device_put: Optional[bool] = None):
+    def __init__(
+        self,
+        stream,
+        depth: int = 2,
+        device_put: Optional[bool] = None,
+        retries: int = 0,
+    ):
         assert depth >= 1
         self.stream = stream
         self.depth = depth
         # None = auto: transfer eagerly on real accelerators; on the CPU
         # backend there is no H2D copy to hide, so skip the extra dispatch
         self.device_put = device_put
+        self.retries = max(0, retries)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._err: Optional[BaseException] = None
         self._last_state: Optional[Dict] = None
         self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        self.n_producer_retries = 0
 
     # ------------------------------------------------------------ producer
 
@@ -51,7 +69,25 @@ class Prefetcher:
                 import jax
 
                 put = jax.default_backend() != "cpu"
-            for batch in self.stream:
+            budget = self.retries
+            it = iter(self.stream)
+            while True:
+                try:
+                    batch = next(it)
+                except StopIteration:
+                    return  # clean end of stream: finally parks the sentinel
+                except Exception:
+                    # producer crash: streams with a cursor resume from it on
+                    # re-iteration, and a wrapped fault stream only advances
+                    # its index on an actual yield, so the failed batch is
+                    # re-attempted — not dropped
+                    if budget <= 0 or self._stop.is_set():
+                        raise
+                    budget -= 1
+                    self.n_producer_retries += 1
+                    it = iter(self.stream)
+                    continue
+                budget = self.retries  # consecutive-failure budget
                 if put:
                     import jax
 
@@ -79,13 +115,28 @@ class Prefetcher:
 
     def __iter__(self) -> Iterator[Dict]:
         if self._thread is None:
+            # fresh start OR re-arm after close(): the old Event/Queue are
+            # poisoned (stop set, queue drained), so rebuild both
+            self._stop = threading.Event()
+            self._q = queue.Queue(maxsize=self.depth)
+            self._err = None
+            self._closed = False
             self._thread = threading.Thread(
                 target=self._produce, name="repro-prefetch", daemon=True
             )
             self._thread.start()
         try:
             while True:
-                item = self._q.get()
+                if self._closed:
+                    raise RuntimeError(
+                        "Prefetcher is closed; iterate it again (a fresh "
+                        "__iter__ re-arms the producer) instead of calling "
+                        "next() on an iterator that outlived close()"
+                    )
+                try:
+                    item = self._q.get(timeout=0.05)
+                except queue.Empty:
+                    continue  # poll so a concurrent close() can't wedge us
                 if item is _SENTINEL:
                     if self._err is not None:
                         raise self._err
@@ -97,7 +148,9 @@ class Prefetcher:
             self.close()
 
     def close(self) -> None:
-        """Stop the producer (even mid-put) and join it."""
+        """Stop the producer (even mid-put) and join it. Idempotent; a
+        later fresh `__iter__()` re-arms the prefetcher."""
+        self._closed = True
         self._stop.set()
         if self._thread is not None:
             while True:  # unblock a producer stuck on a full queue
@@ -133,3 +186,6 @@ class Prefetcher:
     def load_state_dict(self, state: Dict) -> None:
         assert self._thread is None, "load_state_dict before iteration starts"
         self.stream.load_state_dict(state)
+        # the snapshot of the last pre-rewind batch is now stale; without
+        # this a post-rollback checkpoint would persist the OLD cursor
+        self._last_state = None

@@ -25,6 +25,18 @@ def main(argv=None):
     ap.add_argument("--max-seq-len", type=int, default=0, help="0 = auto")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None)
+    # robustness flags (DESIGN.md §Robustness)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget; overdue requests are "
+                         "dropped ('expired') or evicted ('deadline')")
+    ap.add_argument("--queue-timeout-ms", type=float, default=None,
+                    help="max time a request may wait for admission")
+    ap.add_argument("--shed-on-full", action="store_true",
+                    help="under overload, shed the oldest waiting request "
+                         "instead of refusing new submissions")
+    ap.add_argument("--inject", action="append", default=None, metavar="SPEC",
+                    help="fault injection, e.g. 'slow_step@ms=50' (decode "
+                         "slowdown driving deadline misses)")
     args = ap.parse_args(argv)
 
     import jax
@@ -43,6 +55,14 @@ def main(argv=None):
     else:
         params = model.init(jax.random.PRNGKey(0))
 
+    step_delay = 0.0
+    if args.inject:
+        from repro.robustness import FaultPlan
+
+        faults = FaultPlan.from_specs(args.inject)
+        step_delay = faults.step_delay()
+        print("injecting: " + "; ".join(f.describe() for f in faults.faults))
+
     max_seq_len = args.max_seq_len or (args.prompt_len + args.gen + 1)
     eng = ContinuousBatchingEngine(
         model,
@@ -52,6 +72,12 @@ def main(argv=None):
         max_seq_len=max_seq_len,
         temperature=args.temperature,
         eos_id=args.eos_id,
+        default_deadline=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        queue_timeout=(
+            args.queue_timeout_ms / 1e3 if args.queue_timeout_ms else None
+        ),
+        shed_on_full=args.shed_on_full,
+        step_delay=step_delay,
     )
     rng = np.random.default_rng(0)
     reqs = []
@@ -73,6 +99,12 @@ def main(argv=None):
         f"served {len(reqs)} requests over {eng.n_slots} slots in {eng.n_steps} "
         f"steps ({total} tokens: {eng.prefill_tokens} prefill / {eng.decode_tokens} decode)"
     )
+    if eng.n_deadline_missed or eng.n_shed:
+        print(
+            f"deadline misses: {eng.n_deadline_missed} "
+            f"({eng.n_deadline_missed / max(len(reqs), 1):.1%}), "
+            f"shed/timeout: {eng.n_shed}"
+        )
     if cfg.is_moe:
         load = eng.expert_load
         mean = max(load.mean(), 1e-9)

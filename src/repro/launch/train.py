@@ -36,7 +36,7 @@ import json
 import sys
 
 
-def _build_data_stream(cfg, args):
+def _build_data_stream(cfg, args, faults=None):
     """Resolve shards + tokenizer, return (BatchStream, tokenizer).
 
     The tokenizer is loaded from --tokenizer when the file exists, else
@@ -91,9 +91,14 @@ def _build_data_stream(cfg, args):
         world_size=jax.process_count(),
         shuffle_buffer=args.shuffle_buffer,
         seed=args.data_seed,
+        io_retries=args.io_retries,
+        open_fn=faults.open_fn() if faults is not None else None,
     )
+    if faults is not None:
+        stream = faults.wrap_stream(stream)  # flaky_stream / stall_prefetch
     if args.prefetch > 0:
-        stream = Prefetcher(stream, depth=args.prefetch)
+        # one retry per injected/transient stream crash, plus headroom
+        stream = Prefetcher(stream, depth=args.prefetch, retries=args.io_retries)
     return stream, tokenizer
 
 
@@ -160,6 +165,31 @@ def main(argv=None):
                     help="prefetch queue depth (0 = tokenize/pack inline)")
     ap.add_argument("--data-seed", type=int, default=0,
                     help="loader shuffle seed")
+    # robustness flags (DESIGN.md §Robustness)
+    ap.add_argument("--guard", default=None, choices=["skip", "rollback", "raise"],
+                    help="anomaly policy for non-finite loss/grads: 'skip' "
+                         "keeps the pre-step state (escalating to LR drops "
+                         "and rollback if persistent), 'rollback' restores "
+                         "the newest valid checkpoint and replays, 'raise' "
+                         "fails fast")
+    ap.add_argument("--spike-factor", type=float, default=0.0,
+                    help="loss-spike anomaly threshold as a multiple of the "
+                         "recent median (0 disables; implies --guard skip "
+                         "when no policy is given)")
+    ap.add_argument("--spike-window", type=int, default=8,
+                    help="finite losses in the spike reference window")
+    ap.add_argument("--guard-duals", action="store_true",
+                    help="router dual-health watchdog: reset a layer's "
+                         "carried q / forecaster EMAs to safe init when "
+                         "non-finite or runaway")
+    ap.add_argument("--inject", action="append", default=None, metavar="SPEC",
+                    help="fault injection, repeatable: 'nan_grad@step=3', "
+                         "'ckpt_corrupt@step=0,mode=bitflip', "
+                         "'flaky_open@p=0.3,p_read=0.1', 'flaky_stream@at=2'; "
+                         "see repro.robustness.faults")
+    ap.add_argument("--io-retries", type=int, default=3,
+                    help="consecutive shard open/read failures retried with "
+                         "backoff before the loader raises")
     # mesh flags
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="host mesh over local devices, e.g. 4x2 = 4-way data x 2-way model")
@@ -191,7 +221,7 @@ def main(argv=None):
     cfg = configs.reduced_for_smoke(args.arch) if args.reduced else configs.get(args.arch)
     if (
         args.method or args.bip_iters or args.sync or args.n_bisect
-        or args.bisect_fanout or args.forecast
+        or args.bisect_fanout or args.forecast or args.guard_duals
         or args.forecast_decay is not None or args.forecast_margin is not None
     ):
         routing = dataclasses.replace(
@@ -210,6 +240,7 @@ def main(argv=None):
                 cfg.routing.forecast_margin
                 if args.forecast_margin is None else args.forecast_margin
             ),
+            guard_duals=args.guard_duals or cfg.routing.guard_duals,
         )
         cfg = dataclasses.replace(cfg, routing=routing)
     if args.bf16:
@@ -242,10 +273,27 @@ def main(argv=None):
         f" micro={args.micro}"
         f" data={args.data or 'synthetic'}"
     )
+    faults = None
+    if args.inject:
+        from repro.robustness import FaultPlan
+
+        faults = FaultPlan.from_specs(args.inject)
+        print("injecting: " + "; ".join(f.describe() for f in faults.faults))
+    guard = None
+    if args.guard or args.spike_factor:
+        from repro.robustness import GuardConfig
+
+        guard = GuardConfig(
+            policy=args.guard or "skip",
+            spike_factor=args.spike_factor,
+            spike_window=args.spike_window,
+        )
     if args.data:
-        batches, tokenizer = _build_data_stream(cfg, args)
+        batches, tokenizer = _build_data_stream(cfg, args, faults)
     else:
         batches = SyntheticBatchStream(cfg, args.batch, args.seq_len, args.steps)
+        if faults is not None:
+            batches = faults.wrap_stream(batches)
     state, log = train_loop(
         model,
         batches,
@@ -257,6 +305,8 @@ def main(argv=None):
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every or (args.steps if args.ckpt_dir else 0),
         resume=args.resume,
+        guard=guard,
+        faults=faults,
     )
     if args.data:
         # in-sample by construction: same shards as training (only the

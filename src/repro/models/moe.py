@@ -72,6 +72,8 @@ def router_config(cfg: ModelConfig, data_axes: Tuple[str, ...] = ()) -> RouterCo
         forecast_decay=r.forecast_decay,
         forecast_margin=r.forecast_margin,
         forecast_floor=r.forecast_floor,
+        guard_duals=r.guard_duals,
+        dual_abs_limit=r.dual_abs_limit,
     )
 
 

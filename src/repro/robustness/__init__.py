@@ -1,0 +1,28 @@
+"""Fault tolerance: injection registry + anomaly-guard policies.
+
+`faults` makes failures reproducible (seeded injectors for NaN grads,
+checkpoint bitrot, flaky shards, stalled prefetch, slow serve steps);
+`guards` makes recovery deterministic (skip -> reduce-LR -> rollback
+ladder over the in-graph state select). See DESIGN.md §Robustness.
+"""
+from repro.robustness.faults import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    corrupt_file,
+    parse_fault,
+)
+from repro.robustness.guards import (  # noqa: F401
+    GuardConfig,
+    TrainGuard,
+    TrainingDiverged,
+)
+
+__all__ = [
+    "Fault",
+    "FaultPlan",
+    "GuardConfig",
+    "TrainGuard",
+    "TrainingDiverged",
+    "corrupt_file",
+    "parse_fault",
+]

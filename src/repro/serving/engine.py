@@ -40,6 +40,11 @@ class ContinuousBatchingEngine:
         max_waiting: int = 256,
         use_kernel: Optional[bool] = None,
         seed: int = 0,
+        default_deadline: Optional[float] = None,
+        queue_timeout: Optional[float] = None,
+        shed_on_full: bool = False,
+        step_delay: float = 0.0,
+        clock=time.perf_counter,
     ):
         cfg = model.cfg
         if (
@@ -72,7 +77,21 @@ class ContinuousBatchingEngine:
         self.chunk_size = chunk_size
         self.max_seq_len = max_seq_len
         self.eos_id = eos_id
-        self.scheduler = Scheduler(n_slots, max_waiting=max_waiting)
+        # robustness knobs (DESIGN.md §Robustness): `default_deadline` is a
+        # RELATIVE per-request latency budget applied at submit (absolute
+        # deadline = clock() + budget); `clock` is injectable so deadline /
+        # timeout behavior is testable deterministically with a fake clock;
+        # `step_delay` is the slow_step fault-injection hook (seconds slept
+        # per step, simulating decode slowdown).
+        self.default_deadline = default_deadline
+        self.step_delay = step_delay
+        self.clock = clock
+        self.scheduler = Scheduler(
+            n_slots,
+            max_waiting=max_waiting,
+            queue_timeout=queue_timeout,
+            shed_on_full=shed_on_full,
+        )
 
         self.cache = model.init_slot_cache(params, n_slots, max_seq_len)
         self.router_states = model.init_router_states()
@@ -101,6 +120,8 @@ class ContinuousBatchingEngine:
             (cfg.routing.n_experts if cfg.is_moe else 1,), np.float64
         )
         self.max_vio_per_step: List[float] = []
+        self.n_deadline_missed = 0  # finish_reason 'deadline' or 'expired'
+        self.n_shed = 0             # finish_reason 'shed' or 'timeout'
 
     # -------------------------------------------------------------- intake
 
@@ -112,25 +133,50 @@ class ContinuousBatchingEngine:
         eos_id: Optional[int] = None,
         ignore_eos: bool = False,
         arrival_time: float = 0.0,
+        deadline: Optional[float] = None,
     ) -> Optional[Request]:
         """Queue one request. Returns it, or None under backpressure
-        (bounded waiting queue full — retry after stepping the engine)."""
+        (bounded waiting queue full — retry after stepping the engine;
+        never None when the engine sheds on full). `deadline` is a RELATIVE
+        latency budget in seconds (falls back to the engine default);
+        overdue requests are dropped/evicted with a deadline outcome
+        instead of holding resources."""
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
         assert len(prompt) < self.max_seq_len, "prompt does not fit the cache"
+        now = self.clock()
+        budget = deadline if deadline is not None else self.default_deadline
         req = Request(
             prompt=prompt,
             max_new_tokens=max_new_tokens,
             eos_id=eos_id,
             ignore_eos=ignore_eos,
             arrival_time=arrival_time,
+            deadline=None if budget is None else now + budget,
         )
-        return req if self.scheduler.submit(req) else None
+        return req if self.scheduler.submit(req, now) else None
 
     # ---------------------------------------------------------------- step
 
+    def _account_drops(self, reqs: List[Request]) -> List[Request]:
+        for r in reqs:
+            if r.finish_reason in ("deadline", "expired"):
+                self.n_deadline_missed += 1
+            elif r.finish_reason in ("shed", "timeout"):
+                self.n_shed += 1
+        return reqs
+
     def step(self) -> List[Request]:
-        """One fused serve step. Returns requests completed this step."""
-        now = time.perf_counter()
+        """One fused serve step. Returns requests completed this step —
+        including any dropped by the deadline/timeout sweep or shed at
+        submit, so every request's outcome is reported exactly once."""
+        if self.step_delay > 0:
+            time.sleep(self.step_delay)  # slow_step fault injection
+        now = self.clock()
+        # sweep BEFORE admission: evicting overdue slots frees them for
+        # waiting work within the same step
+        dropped = self._account_drops(
+            self.scheduler.expire(now) + self.scheduler.take_dropped()
+        )
         for slot_idx, _req in self.scheduler.admit(now):
             self.cache = self._reset(self.cache, jnp.asarray(slot_idx))
 
@@ -150,7 +196,7 @@ class ContinuousBatchingEngine:
                 lengths[i] = 1
                 plan.append((i, slot, DECODE, 1))
         if not plan:
-            return []
+            return dropped
 
         self._rng, sub = jax.random.split(self._rng)
         nxt, self.cache, self.router_states, mets = self._serve_step(
@@ -166,8 +212,8 @@ class ContinuousBatchingEngine:
         self.expert_load += np.asarray(mets["moe_load"], np.float64)
         self.max_vio_per_step.append(float(mets["max_vio"]))
 
-        done: List[Request] = []
-        now = time.perf_counter()
+        done: List[Request] = dropped
+        now = self.clock()
         for i, slot, kind, n_tok in plan:
             req = slot.request
             if kind == PREFILL:
@@ -204,7 +250,7 @@ class ContinuousBatchingEngine:
             assert len(req.prompt) < self.max_seq_len, "prompt does not fit the cache"
         while pending:
             req = pending[0]
-            if self.scheduler.submit(req):
+            if self.scheduler.submit(req, self.clock()):
                 pending.pop(0)
             else:
                 finished.extend(self.step())  # make room

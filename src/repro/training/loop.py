@@ -102,6 +102,17 @@ def _reduce_micro_mets(mets: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
     return out
 
 
+# control-vector layout for the guarded train step: a (3,) float32 array of
+# per-step scalars the host can set without recompiling.
+CTRL_INJECT_NAN = 0  # > 0: fault injection — scale the loss (hence grads) by NaN
+CTRL_FORCE_SKIP = 1  # > 0: select the pre-step state (planned skip / replay)
+CTRL_LR_SCALE = 2    # multiplier on the scheduled LR (guard's reduce-LR ladder)
+
+
+def default_controls() -> np.ndarray:
+    return np.array([0.0, 0.0, 1.0], np.float32)
+
+
 def make_train_step(
     model: Model,
     opt_cfg: _adamw.AdamWConfig,
@@ -109,6 +120,7 @@ def make_train_step(
     *,
     microbatches: int = 1,
     rng: Optional[jnp.ndarray] = None,
+    guarded: bool = False,
 ):
     """Returns train_step(state, batch) -> (state, metrics). Pure; jit-ready.
 
@@ -121,15 +133,33 @@ def make_train_step(
     accumulation), so the per-step randomness seen by dropout-style
     regularizers is a pure function of checkpointed state — resume-stable
     by construction.
+
+    `guarded=True` changes the signature to train_step(state, batch,
+    controls) with `controls` a (3,) float32 vector (see CTRL_*), and adds
+    the in-graph anomaly guard: `step_ok = isfinite(loss) &
+    isfinite(grad_norm) & ~force_skip`, with EVERY output leaf (params,
+    Adam moments incl. the step counter, router states) selected back to
+    its pre-step value when false. A NaN/Inf step therefore cannot poison
+    the state, and a skipped step is bit-identical to the step never having
+    run — the invariant the rollback-recovery determinism test relies on.
+    Metrics gain 'step_ok'.
     """
 
-    def _fwd_bwd(params, batch, router, key):
-        return jax.value_and_grad(model.loss_fn, has_aux=True)(
-            params, batch, router, key
-        )
+    def _fwd_bwd(params, batch, router, key, nan_coef=None):
+        def f(p):
+            loss, aux = model.loss_fn(p, batch, router, key)
+            if nan_coef is not None:
+                # fault seam (robustness/faults.NanGrad): nan_coef is 1.0
+                # normally, NaN when the injector fires — grads = coef * dL
+                loss = loss * nan_coef
+            return loss, aux
 
-    def _apply(state: TrainState, grads, new_router, mets):
+        return jax.value_and_grad(f, has_aux=True)(params)
+
+    def _apply(state: TrainState, grads, new_router, mets, lr_scale=None):
         lr = lr_fn(state.opt_state["step"].astype(jnp.float32))
+        if lr_scale is not None:
+            lr = lr * lr_scale
         new_params, new_opt, info = _adamw.adamw_update(
             grads, state.opt_state, state.params, lr, opt_cfg
         )
@@ -140,17 +170,17 @@ def make_train_step(
             mets,
         )
 
-    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+    def _run(state: TrainState, batch: Dict[str, jnp.ndarray], nan_coef, lr_scale):
         step_key = (
             None if rng is None else jax.random.fold_in(rng, state.opt_state["step"])
         )
         if microbatches <= 1:
             (loss, (new_router, mets)), grads = _fwd_bwd(
-                state.params, batch, state.router_states, step_key
+                state.params, batch, state.router_states, step_key, nan_coef
             )
             mets = dict(mets)
             mets["loss"] = loss
-            return _apply(state, grads, new_router, mets)
+            return _apply(state, grads, new_router, mets, lr_scale)
 
         mb = _split_micro(batch, microbatches)
         # accumulate in the parameter dtype: fp32 accumulation doubles the
@@ -162,7 +192,9 @@ def make_train_step(
             one, mb_idx = inp
             grads_acc, router = carry
             key = None if step_key is None else jax.random.fold_in(step_key, mb_idx)
-            (loss, (router, mets)), grads = _fwd_bwd(state.params, one, router, key)
+            (loss, (router, mets)), grads = _fwd_bwd(
+                state.params, one, router, key, nan_coef
+            )
             grads_acc = jax.tree.map(
                 lambda a, g: a + g.astype(acc_dt), grads_acc, grads
             )
@@ -175,9 +207,39 @@ def make_train_step(
             body, (zero, state.router_states), (mb, jnp.arange(microbatches))
         )
         grads = jax.tree.map(lambda g: g / microbatches, grads)
-        return _apply(state, grads, new_router, _reduce_micro_mets(mets))
+        return _apply(state, grads, new_router, _reduce_micro_mets(mets), lr_scale)
 
-    return train_step
+    if not guarded:
+
+        def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+            return _run(state, batch, None, None)
+
+        return train_step
+
+    def guarded_step(
+        state: TrainState, batch: Dict[str, jnp.ndarray], controls: jnp.ndarray
+    ):
+        controls = controls.astype(jnp.float32)
+        nan_coef = jnp.where(controls[CTRL_INJECT_NAN] > 0, jnp.nan, 1.0)
+        new_state, mets = _run(
+            state, batch, nan_coef, controls[CTRL_LR_SCALE]
+        )
+        ok = (
+            jnp.isfinite(mets["loss"])
+            & jnp.isfinite(mets["grad_norm"])
+            & (controls[CTRL_FORCE_SKIP] <= 0)
+        )
+        # anomaly => keep the PRE-step state for every leaf (params, Adam
+        # moments + step counter, router duals/forecaster): elementwise
+        # select, so donation aliasing still holds and a healthy step pays
+        # one predicated copy
+        final = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_state, state
+        )
+        mets["step_ok"] = ok
+        return final, mets
+
+    return guarded_step
 
 
 def compile_train_step(
@@ -193,6 +255,7 @@ def compile_train_step(
     st_specs=None,
     b_specs=None,
     rng: Optional[jnp.ndarray] = None,
+    guarded: bool = False,
 ):
     """jit the train step, with explicit shardings when a mesh is given.
 
@@ -204,13 +267,18 @@ def compile_train_step(
     come back replicated. Callers that already resolved the spec trees (e.g.
     train_loop, which also places the arrays with them) pass st_specs /
     b_specs so there is one resolution per run.
+
+    `guarded=True` compiles the 3-arg guarded step (see make_train_step);
+    the control vector is replicated on a mesh.
     """
-    step = make_train_step(model, opt_cfg, lr_fn, microbatches=microbatches, rng=rng)
+    step = make_train_step(
+        model, opt_cfg, lr_fn, microbatches=microbatches, rng=rng, guarded=guarded
+    )
     donate_argnums = (0,) if donate else ()
     if mesh is None:
         return jax.jit(step, donate_argnums=donate_argnums)
 
-    from jax.sharding import NamedSharding
+    from jax.sharding import NamedSharding, PartitionSpec
 
     from repro.distributed.sharding import batch_specs, train_state_specs
 
@@ -223,9 +291,12 @@ def compile_train_step(
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
     )
+    in_shardings = (as_sharding(st_specs), as_sharding(b_specs))
+    if guarded:
+        in_shardings = in_shardings + (NamedSharding(mesh, PartitionSpec()),)
     return jax.jit(
         step,
-        in_shardings=(as_sharding(st_specs), as_sharding(b_specs)),
+        in_shardings=in_shardings,
         out_shardings=(as_sharding(st_specs), None),
         donate_argnums=donate_argnums,
     )
@@ -241,6 +312,27 @@ class TrainLog:
     max_vio_steps: List[np.ndarray] = dataclasses.field(default_factory=list)
     per_layer: List[BalanceTracker] = dataclasses.field(default_factory=list)
     model_tracker: BalanceTracker = dataclasses.field(default_factory=BalanceTracker)
+    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    def truncate(self, n: int) -> None:
+        """Drop records past the first `n` steps and rebuild the balance
+        trackers from the survivors — a rollback rewinds the log so replayed
+        steps are not double-counted in AvgMaxVio/SupMaxVio."""
+        n = max(0, n)
+        self.losses = self.losses[:n]
+        self.perplexities = self.perplexities[:n]
+        self.step_times = self.step_times[:n]
+        self.max_vio_steps = self.max_vio_steps[:n]
+        self.per_layer = []
+        self.model_tracker = BalanceTracker()
+        kept, self.max_vio_steps = self.max_vio_steps, []
+        for vios in kept:
+            self.max_vio_steps.append(vios)
+            if not self.per_layer:
+                self.per_layer = [BalanceTracker() for _ in range(vios.size)]
+            for t, v in zip(self.per_layer, vios):
+                t.add(float(v))
+            self.model_tracker.add(float(vios.max()))
 
     def record(self, mets: Dict[str, Any], dt: float) -> None:
         self.losses.append(float(mets["ce_loss"]))
@@ -267,6 +359,8 @@ class TrainLog:
         }
         if self.per_layer:
             out["AvgMaxVio_per_layer"] = [t.avg_max_vio for t in self.per_layer]
+        if self.events:
+            out["guard_events"] = list(self.events)
         return out
 
 
@@ -288,6 +382,8 @@ def train_loop(
     ckpt_every: int = 0,
     resume: bool = False,
     async_ckpt: bool = True,
+    guard=None,
+    faults=None,
 ) -> Tuple[TrainState, TrainLog]:
     """Host driver. With `mesh` the state/batches are placed with the specs
     from `distributed.sharding` and the step compiles with explicit
@@ -306,9 +402,27 @@ def train_loop(
     (checkpoint/store.py). Iteration stops at `total_steps` even when the
     stream is infinite (real-corpus loaders loop epochs forever).
 
-    `resume=True` restores the newest checkpoint under `ckpt_dir` (if any)
-    and continues bit-exactly — including the router duals q and the data
-    cursor.
+    `resume=True` restores the newest VALID checkpoint under `ckpt_dir`
+    (corrupt/truncated files are skipped with a warning) and continues
+    bit-exactly — including the router duals q and the data cursor.
+
+    Robustness (DESIGN.md §Robustness):
+
+    * `guard` (a `robustness.GuardConfig`) compiles the guarded step —
+      non-finite loss/grads leave the state bit-untouched — and runs the
+      host-side skip -> reduce-LR -> rollback ladder. A rollback restores
+      the newest valid checkpoint, rewinds the data cursor through the
+      stream's `load_state_dict`, truncates the log, and replays; the
+      anomalous step is force-skipped on replay, so recovery is
+      deterministic (bit-identical to a run that skipped the step
+      in place). Rollback requires a checkpoint manager AND a rewindable
+      BatchStream; without them the ladder raises `TrainingDiverged`.
+    * `faults` (a `robustness.FaultPlan`) drives the injection seams: the
+      NaN scalar into the guarded step, and post-save checkpoint
+      corruption for chaos tests.
+    * SIGTERM (preemption) triggers one final SYNCHRONOUS checkpoint and a
+      clean return — installed only on the main thread and restored on
+      exit.
     """
     from repro.optim.schedules import linear_warmup_cosine
 
@@ -349,75 +463,160 @@ def train_loop(
         st_specs = train_state_specs(state, model.cfg, mesh)
         state = shard_tree(state, st_specs, mesh)
 
+    guarded = guard is not None or (faults is not None and faults.get("nan_grad"))
+    tguard = None
+    if guarded:
+        from repro.robustness.guards import ROLLBACK, GuardConfig, TrainGuard
+
+        tguard = TrainGuard(
+            guard if guard is not None else GuardConfig(),
+            can_rollback=manager is not None and is_stream and ckpt_every > 0,
+        )
+
+    # preemption safety: SIGTERM requests one final synchronous checkpoint.
+    # Signal handlers are a main-thread-only facility; elsewhere (e.g. a
+    # train_loop driven from a worker thread in tests) the flag stays False.
+    import signal as _signal
+    import threading as _threading
+
+    sig_flag = {"term": False}
+    prev_handler = None
+    hook_signal = (
+        manager is not None
+        and _threading.current_thread() is _threading.main_thread()
+    )
+    if hook_signal:
+        prev_handler = _signal.getsignal(_signal.SIGTERM)
+        _signal.signal(_signal.SIGTERM, lambda *_: sig_flag.update(term=True))
+
     step_fn = None
     log = TrainLog()
     mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
     saved_at = -1
-    it = iter(batches)
-    i = loop_start - 1
-    while True:
-        # bound infinite streams (epoch-looping corpus loaders) *before*
-        # pulling: the stream cursor must stay in sync with the step count,
-        # so never consume a batch that won't be trained on
-        if total_steps and i + 1 >= total_steps:
-            break
-        try:
-            batch = next(it)
-        except StopIteration:
-            break
-        i += 1
-        if i < start_step:
-            continue  # resumed plain iterable: replay-skip the consumed prefix
-        if mesh is not None:
-            if b_specs is None:
-                b_all = batch_specs(model.cfg, mesh, jax.tree.leaves(batch)[0].shape[0])
-                b_specs = {k: b_all[k] for k in batch}
-            batch = shard_tree(batch, b_specs, mesh)
-        if step_fn is None:
-            step_fn = compile_train_step(
-                model,
-                opt_cfg,
-                linear_warmup_cosine(lr, warmup_steps, total_steps),
-                state,
-                batch,
-                mesh=mesh,
-                microbatches=microbatches,
-                donate=donate,
-                st_specs=st_specs,
-                b_specs=b_specs,
-                rng=jax.random.fold_in(key, 0x5eed),
-            )
-        t0 = time.perf_counter()
-        with mesh_ctx:
-            state, mets = step_fn(state, batch)
-        jax.block_until_ready(mets["loss"])
-        log.record(mets, time.perf_counter() - t0)
-        if log_every and i % log_every == 0:
-            print(
-                f"step {i:5d} loss {log.losses[-1]:.4f} ppl {log.perplexities[-1]:.2f}"
-                + (
-                    f" maxvio {log.max_vio_steps[-1].max():.3f}"
-                    if log.max_vio_steps
-                    else ""
-                )
-            )
-        if manager is not None and ckpt_every and (i + 1) % ckpt_every == 0:
-            manager.save_train_state(
-                state,
-                data_state=batches.state_dict() if is_stream else None,
-                block=not async_ckpt,
-            )
-            saved_at = i
-    if manager is not None and ckpt_every and saved_at != i:
-        manager.save_train_state(  # final state, off-boundary stop
+
+    def _save(block: bool) -> Optional[str]:
+        path = manager.save_train_state(
             state,
             data_state=batches.state_dict() if is_stream else None,
-            block=not async_ckpt,
+            block=block,
         )
-    if manager is not None:
-        manager.wait()  # checkpoints durable before the loop returns
-    if hasattr(batches, "close"):
-        batches.close()  # stop a Prefetcher's producer on early break
+        if faults is not None and faults.get("ckpt_corrupt") is not None:
+            manager.wait()  # the file must be fully written before corrupting
+            if faults.corrupt_after_save(path):
+                log.events.append(
+                    {"step": i, "kind": "ckpt_corrupted", "path": path}
+                )
+        return path
+
+    try:
+        it = iter(batches)
+        i = loop_start - 1
+        while True:
+            # bound infinite streams (epoch-looping corpus loaders) *before*
+            # pulling: the stream cursor must stay in sync with the step count,
+            # so never consume a batch that won't be trained on
+            if total_steps and i + 1 >= total_steps:
+                break
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            i += 1
+            if i < start_step:
+                continue  # resumed plain iterable: replay-skip the consumed prefix
+            if mesh is not None:
+                if b_specs is None:
+                    b_all = batch_specs(
+                        model.cfg, mesh, jax.tree.leaves(batch)[0].shape[0]
+                    )
+                    b_specs = {k: b_all[k] for k in batch}
+                batch = shard_tree(batch, b_specs, mesh)
+            if step_fn is None:
+                step_fn = compile_train_step(
+                    model,
+                    opt_cfg,
+                    linear_warmup_cosine(lr, warmup_steps, total_steps),
+                    state,
+                    batch,
+                    mesh=mesh,
+                    microbatches=microbatches,
+                    donate=donate,
+                    st_specs=st_specs,
+                    b_specs=b_specs,
+                    rng=jax.random.fold_in(key, 0x5eed),
+                    guarded=bool(guarded),
+                )
+            t0 = time.perf_counter()
+            if guarded:
+                force_skip, lr_scale = tguard.controls(i)
+                inject = faults is not None and faults.nan_fires(i)
+                controls = jnp.asarray(
+                    [float(inject), float(force_skip), lr_scale], jnp.float32
+                )
+                with mesh_ctx:
+                    state, mets = step_fn(state, batch, controls)
+            else:
+                with mesh_ctx:
+                    state, mets = step_fn(state, batch)
+            jax.block_until_ready(mets["loss"])
+            dt = time.perf_counter() - t0
+            if guarded:
+                action = tguard.observe(  # raises TrainingDiverged on RAISE
+                    i, float(mets["loss"]), bool(mets["step_ok"])
+                )
+                log.events = tguard.events
+                if action == ROLLBACK:
+                    r_step, state = manager.restore_train_state()
+                    ds = manager.restore_data_state(r_step)
+                    if ds is None:
+                        from repro.robustness.guards import TrainingDiverged
+
+                        raise TrainingDiverged(
+                            f"rollback to step {r_step}: checkpoint has no "
+                            f"data cursor to rewind the stream with"
+                        )
+                    if hasattr(batches, "close"):
+                        batches.close()  # a Prefetcher must re-arm post-rewind
+                    batches.load_state_dict(ds)
+                    it = iter(batches)
+                    if mesh is not None:
+                        state = shard_tree(state, st_specs, mesh)
+                    log.truncate(r_step - loop_start)
+                    log.events = tguard.events
+                    start_step = 0  # a fallback restore may predate `resume`
+                    i = r_step - 1
+                    if log_every:
+                        print(f"rollback -> step {r_step} (replaying)")
+                    continue
+            log.record(mets, dt)
+            if log_every and i % log_every == 0:
+                print(
+                    f"step {i:5d} loss {log.losses[-1]:.4f} "
+                    f"ppl {log.perplexities[-1]:.2f}"
+                    + (
+                        f" maxvio {log.max_vio_steps[-1].max():.3f}"
+                        if log.max_vio_steps
+                        else ""
+                    )
+                )
+            if manager is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+                _save(block=not async_ckpt)
+                saved_at = i
+            if sig_flag["term"]:
+                # preemption: make the state durable NOW, synchronously
+                _save(block=True)
+                saved_at = i
+                log.events.append({"step": i, "kind": "sigterm_checkpoint"})
+                break
+        if manager is not None and ckpt_every and saved_at != i:
+            _save(block=not async_ckpt)  # final state, off-boundary stop
+    finally:
+        if hook_signal:
+            _signal.signal(_signal.SIGTERM, prev_handler)
+        if manager is not None:
+            manager.wait()  # checkpoints durable before the loop returns
+        if hasattr(batches, "close"):
+            batches.close()  # stop a Prefetcher's producer on early break
     return state, log
 
 

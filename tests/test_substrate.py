@@ -80,7 +80,17 @@ def test_checkpoint_manager_gc():
         for s in [10, 20, 30]:
             mgr.save(s, {"x": jnp.ones((2,))})
         files = sorted(os.listdir(d))
-        assert files == ["step_20.npz", "step_30.npz"]
+        # each kept step = npz + its integrity-manifest sidecar
+        assert [f for f in files if f.endswith(".npz")] == [
+            "step_20.npz",
+            "step_30.npz",
+        ]
+        assert files == [
+            "step_20.manifest.json",
+            "step_20.npz",
+            "step_30.manifest.json",
+            "step_30.npz",
+        ]
         step, tree = mgr.restore()
         assert step == 30 and np.all(np.asarray(tree["x"]) == 1.0)
 
