@@ -43,16 +43,32 @@ single-device MaxVio trajectory (psum'd duals == paper duals); sync='local'
 solves per-shard BIPs and drifts — that contrast is the sharded
 counterpart of the committed BENCH_balance_sweep.json table, and it lands
 in BENCH_balance_sweep_sync.json with every entry's sync/mesh recorded.
+
+``--matrix`` runs the FULL-DEPTH all-method matrix instead: every
+registered balancer (the paper's four plus phi / lpr / expert_choice) at
+full minimind depth (8 layers, d_model 512 — clearing the reduced-geometry
+caveat) on 16e and 64e, over {synthetic, real text} × {local, global
+sync}, per-step per-layer MaxVio + final ppl per cell, plus the
+router-level objective/coverage comparison against the LP oracle →
+BENCH_balance_matrix.json. ``--methods a,b,c`` restricts any mode to a
+subset (names resolve through the balancer registry).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+# the historical single-device sweep table (BENCH_balance_sweep.json)
+# compares the paper's four methods; --methods / --matrix reach the rest
 METHODS = ("bip", "lossfree", "aux_loss", "topk")
+# matrix order: paper methods first, then the registry additions
+MATRIX_METHODS = (
+    "bip", "lossfree", "aux_loss", "topk", "phi", "lpr", "expert_choice"
+)
 
 # reduced sweep geometry: enough tokens/step that per-expert loads are
 # meaningful at m=64 (batch*seq = 512 tokens, k=8 -> 64 slots/expert mean)
@@ -66,6 +82,33 @@ def _sweep_cfg(arch: str):
 
     full = configs.get(arch)
     return configs.reduced_for_smoke(arch, routing=full.routing)
+
+
+def _matrix_cfg(arch: str):
+    """Full minimind DEPTH (n_layers, d_model) and the real routing table;
+    the narrow dims (head count, expert hidden, vocab) stay reduced so the
+    matrix is runnable on CPU — the balance problem is experts × depth."""
+    import repro.configs as configs
+
+    full = configs.get(arch)
+    return configs.reduced_for_smoke(
+        arch,
+        routing=full.routing,
+        n_layers=full.n_layers,
+        d_model=full.d_model,
+    )
+
+
+def _resolve_methods(spec: Optional[str], default: Tuple[str, ...]):
+    """--methods csv -> tuple, each name validated against the registry."""
+    from repro.core import get_balancer
+
+    if not spec:
+        return default
+    methods = tuple(s.strip() for s in spec.split(",") if s.strip())
+    for name in methods:
+        get_balancer(name)  # raises ValueError listing registered names
+    return methods
 
 
 def _get_tokenizer(data: str, tokenizer_path: str, vocab_size: int):
@@ -186,6 +229,7 @@ def run(
     pack_mode: str = "pack",
     sync: str = None,
     mesh: tuple = None,
+    methods: Sequence[str] = METHODS,
 ) -> List[Dict[str, Any]]:
     """Returns CSV rows; writes BENCH_balance_sweep.json as a side effect
     (BENCH_balance_sweep_data.json in --data mode, BENCH_balance_sweep_sync
@@ -250,7 +294,7 @@ def run(
                 ("bip", f"bip[sync={sm}]", sm, mesh) for sm in sync_modes
             ]
         else:
-            variants = [(m, m, None, None) for m in METHODS]
+            variants = [(m, m, None, None) for m in methods]
         for method, label, sm, msh in variants:
             rec = _run_method(
                 cfg, method, steps, lr=1e-3,
@@ -292,6 +336,199 @@ def run(
     return rows
 
 
+def router_level_compare(
+    methods: Sequence[str] = ("bip", "expert_choice"),
+    n: int = 256,
+    m: int = 8,
+    k: int = 2,
+    skew: float = 1.5,
+    seeds: Sequence[int] = (0, 1, 2),
+) -> List[Dict[str, Any]]:
+    """Single-gate comparison on skewed score streams vs the LP oracle.
+
+    Every method goes through the SAME registry-backed `route()` call the
+    training paths use (no private per-method wiring), on softmax scores
+    with a deliberate expert-popularity skew, next to the scipy LP upper
+    bound. Per method: routed-objective ratio (Σ selected score mass /
+    LP-opt), MaxVio, and token coverage (fraction with all k / zero
+    experts — the expert-choice trade axis; 1.0 / 0.0 by construction for
+    token-choice methods).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import RouterConfig, init_router_state, route
+    from repro.core.lp_oracle import solve_plp
+
+    rows = []
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(
+            rng.standard_normal((n, m)) + skew * np.linspace(2, -2, m)[None, :],
+            jnp.float32,
+        )
+        s = jax.nn.softmax(logits, axis=-1)
+        _, lp_opt = solve_plp(np.asarray(s), k)
+        row: Dict[str, Any] = {"seed": seed, "lp_opt": float(lp_opt), "methods": {}}
+        for method in methods:
+            cfg = RouterConfig(n_experts=m, top_k=k, strategy=method, bip_iters=8)
+            out = route(logits, init_router_state(cfg), cfg)
+            idx = np.asarray(out.expert_index)
+            per_token = (idx < m).sum(axis=-1)
+            # combine weights are the raw scores of kept selections (zero on
+            # expert_choice's uncovered sentinel slots), so their sum IS the
+            # routed objective the LP bounds
+            row["methods"][method] = {
+                "obj_ratio": float(np.asarray(out.combine_weights).sum()) / lp_opt,
+                "max_vio": float(out.metrics["max_vio"]),
+                "coverage_full": float(np.mean(per_token >= k)),
+                "coverage_zero": float(np.mean(per_token == 0)),
+            }
+        rows.append(row)
+    return rows
+
+
+def _aggregate_router_level(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Mean over seeds, per method."""
+    import numpy as np
+
+    methods = rows[0]["methods"].keys()
+    return {
+        method: {
+            col: round(float(np.mean([r["methods"][method][col] for r in rows])), 4)
+            for col in rows[0]["methods"][method]
+        }
+        for method in methods
+    }
+
+
+def run_matrix(
+    smoke: bool = False,
+    steps: int = 0,
+    data: str = None,
+    tokenizer_path: str = None,
+    pack_mode: str = "pack",
+    methods: Sequence[str] = MATRIX_METHODS,
+) -> List[Dict[str, Any]]:
+    """The all-method balance matrix -> BENCH_balance_matrix.json.
+
+    method × {16e, 64e} × {synthetic, real text} × {local, global sync} at
+    full minimind depth (smoke keeps the reduced sweep geometry so CI stays
+    fast), per-step per-layer MaxVio + final ppl per cell. Cells run
+    single-device (the matrix is a method comparison, not a sharding one —
+    BENCH_balance_sweep_sync.json holds the cross-shard lens), which makes
+    the sync axis honest but degenerate for every method except bip: with
+    no data axes the cross-shard reductions are no-ops, so sync='global'
+    only changes bip (threshold/bisection solver vs the sort-based one).
+    Those bip cells are re-run; the other global cells copy their local
+    trajectory with a note instead of burning identical compute.
+    """
+    import numpy as np
+
+    from repro.core import get_balancer
+
+    steps = steps or (4 if smoke else 24)
+    for name in methods:
+        get_balancer(name)
+    if data is None and os.path.isdir("tests/fixtures/corpus"):
+        data = "tests/fixtures/corpus"
+    data_modes = [("synthetic", None)] + ([("real_text", data)] if data else [])
+    out: Dict[str, Any] = {
+        "meta": {
+            "batch": BATCH,
+            "seq_len": SEQ_LEN,
+            "steps": steps,
+            "smoke": smoke,
+            "data": data,
+            "pack_mode": pack_mode if data else None,
+            "methods": list(methods),
+            "note": (
+                ("reduced smoke geometry; " if smoke else
+                 "FULL minimind depth (n_layers / d_model from the real "
+                 "config; narrow dims reduced for CPU); ")
+                + "identical init + token stream per cell; cells are "
+                "single-device, so sync='global' re-runs only bip (the dual "
+                "solver changes); other methods' global cells copy the "
+                "local trajectory (cross-shard reductions are no-ops "
+                "without data axes) — see BENCH_balance_sweep_sync.json "
+                "for the true cross-shard lens"
+            ),
+        },
+        # single-gate objective/coverage columns vs the LP oracle
+        # (absorbs benchmarks/expert_choice_compare's comparison)
+        "router_level": _aggregate_router_level(
+            router_level_compare(methods=methods)
+        ),
+        "configs": {},
+    }
+    rows: List[Dict[str, Any]] = []
+    for arch in ("minimind_moe_16e", "minimind_moe_64e"):
+        cfg = _sweep_cfg(arch) if smoke else _matrix_cfg(arch)
+        entry: Dict[str, Any] = {
+            "n_experts": cfg.routing.n_experts,
+            "top_k": cfg.routing.top_k,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "bip_iters": cfg.routing.bip_iters,
+            "cells": {},
+        }
+        for mode_name, mode_data in data_modes:
+            for method in methods:
+                rec = _run_method(
+                    cfg, method, steps, lr=1e-3,
+                    data=mode_data, tokenizer_path=tokenizer_path,
+                    pack_mode=pack_mode, sync="local",
+                )
+                entry["cells"][f"{mode_name}/local/{method}"] = rec
+                if method == "bip":
+                    rec_g = _run_method(
+                        cfg, method, steps, lr=1e-3,
+                        data=mode_data, tokenizer_path=tokenizer_path,
+                        pack_mode=pack_mode, sync="global",
+                    )
+                else:
+                    rec_g = dict(rec)
+                    rec_g["note"] = (
+                        "copied from the local cell: single-device "
+                        "trajectory is identical under either sync mode "
+                        "for this method (no data axes)"
+                    )
+                entry["cells"][f"{mode_name}/global/{method}"] = rec_g
+                for sync_label, r in (("local", rec), ("global", rec_g)):
+                    rows.append(
+                        {
+                            "name": (
+                                f"balance_matrix_{cfg.name}_{mode_name}"
+                                f"_{sync_label}_{method}"
+                            ),
+                            "us_per_call": round(
+                                (
+                                    r["mean_step_time"]
+                                    or float(np.mean(r["step_time_s"]))
+                                ) * 1e6,
+                                1,
+                            ),
+                            "derived": (
+                                f"AvgMaxVio={r['AvgMaxVio']:.4f};"
+                                f"SupMaxVio={r['SupMaxVio']:.4f};"
+                                f"ppl={r['final_ppl']:.1f}"
+                            ),
+                        }
+                    )
+                print(
+                    f"  {cfg.name} {mode_name:9s} {method:14s} "
+                    f"AvgMaxVio={rec['AvgMaxVio']:.4f} "
+                    f"ppl={rec['final_ppl']:.1f}",
+                    flush=True,
+                )
+        out["configs"][cfg.name] = entry
+
+    with open("BENCH_balance_matrix.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return rows
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI guard: few steps")
@@ -311,6 +548,12 @@ def main(argv=None) -> int:
                          "device_count=8 for the default 4x2)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="host mesh for --sync runs (default 4x2)")
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated subset of registered balancers "
+                         "(default: the paper's four; --matrix: all)")
+    ap.add_argument("--matrix", action="store_true",
+                    help="all-method full-depth matrix (see module docs) "
+                         "-> BENCH_balance_matrix.json")
     args = ap.parse_args(argv)
     mesh = None
     if args.mesh:
@@ -318,9 +561,25 @@ def main(argv=None) -> int:
             ap.error("--mesh only applies to --sync runs (the method sweep "
                      "is single-device by design)")
         mesh = tuple(int(v) for v in args.mesh.lower().split("x"))
-    for r in run(smoke=args.smoke, steps=args.steps, data=args.data,
-                 tokenizer_path=args.tokenizer, pack_mode=args.pack_mode,
-                 sync=args.sync, mesh=mesh):
+    try:
+        methods = _resolve_methods(
+            args.methods, MATRIX_METHODS if args.matrix else METHODS
+        )
+    except ValueError as e:
+        ap.error(str(e))
+    if args.matrix:
+        if args.sync or mesh:
+            ap.error("--matrix and --sync/--mesh are separate lenses; the "
+                     "matrix is single-device (see BENCH_balance_sweep_sync"
+                     ".json for the cross-shard sweep)")
+        rows = run_matrix(smoke=args.smoke, steps=args.steps, data=args.data,
+                          tokenizer_path=args.tokenizer,
+                          pack_mode=args.pack_mode, methods=methods)
+    else:
+        rows = run(smoke=args.smoke, steps=args.steps, data=args.data,
+                   tokenizer_path=args.tokenizer, pack_mode=args.pack_mode,
+                   sync=args.sync, mesh=mesh, methods=methods)
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
     return 0
 

@@ -15,11 +15,21 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class RoutingSpec:
-    """Routing gate settings for MoE layers (see repro.core.types.RouterConfig)."""
+    """Routing gate settings for MoE layers.
+
+    DEPRECATION NOTE: this spec is now a thin superset of
+    `repro.core.types.RouterConfig` — the fields the router consumes are
+    converted 1:1 by `to_router_config()` (the ONE conversion point; do not
+    hand-copy fields), and validation happens once, in RouterConfig's
+    `__post_init__`, via that conversion. Only the model-level knobs that
+    RouterConfig has no business knowing (capacity_factor, moe_impl) are
+    RoutingSpec's own. New router knobs belong in RouterConfig first;
+    mirror them here only when model configs need to set them.
+    """
 
     n_experts: int = 0
     top_k: int = 0
-    strategy: str = "bip"          # 'topk' | 'aux_loss' | 'lossfree' | 'bip'
+    strategy: str = "bip"          # any registered balancer (core/balancers.py)
     bip_iters: int = 4
     aux_loss_alpha: float = 0.1
     lossfree_lr: float = 0.001
@@ -49,12 +59,41 @@ class RoutingSpec:
     # safe init when any entry is non-finite or |q| > dual_abs_limit
     guard_duals: bool = False
     dual_abs_limit: float = 100.0
+    # registry-method knobs (φ-Balancing / Latent Prototype Routing):
+    phi_lr: float = 0.01
+    lpr_decay: float = 0.99
+    lpr_blend: float = 0.5
     # expert-parallel implementation (DESIGN.md §6 / EXPERIMENTS.md §Perf):
     # 'ep2d' gathers activations, weights stay (experts->model, f->data)
     #        sharded; routing sees the full microbatch (paper-global duals).
     # 'ep'   FSDP path: weights gathered over data per layer per microbatch.
     # 'auto' ep2d for small token counts (decode), ep for train/prefill.
     moe_impl: str = "auto"
+
+    def __post_init__(self):
+        # one validation path: RouterConfig.__post_init__ (via the
+        # conversion shim). Dense configs keep the inert 0-expert default.
+        if self.n_experts > 0:
+            self.to_router_config()
+
+    def to_router_config(self, data_axes: Sequence[str] = (), **overrides):
+        """Convert to the router's RouterConfig (the single mapping point).
+
+        Every field RouterConfig declares that RoutingSpec also carries is
+        copied 1:1; `data_axes` (a mesh property, not a model property) and
+        any `overrides` (e.g. a serving-time use_kernel) are applied on top.
+        """
+        import dataclasses as _dc
+
+        from repro.core.types import RouterConfig
+
+        shared = {f.name for f in _dc.fields(RouterConfig)} & {
+            f.name for f in _dc.fields(self)
+        }
+        kw = {name: getattr(self, name) for name in shared}
+        kw["data_axes"] = tuple(data_axes)
+        kw.update(overrides)
+        return RouterConfig(**kw)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -52,3 +52,28 @@ def expert_choice_route(
         "objective": gates.sum(),
     }
     return gates, mets
+
+
+def expert_choice_select(
+    s: jnp.ndarray, top_k: int, *, norm_topk_prob: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-choice assignment in the router's (n, k) token-slot interface.
+
+    Runs the per-expert top-C selection, then re-reads it token-wise: each
+    token keeps its k highest-gate assignments as (combine_weights,
+    expert_index) rows. Slots beyond a token's assignments carry the
+    SENTINEL index m with zero weight — the dispatch plan sorts the
+    sentinel past every real segment, so uncovered slots occupy no
+    capacity and no load. A token picked by more than k experts keeps only
+    its k best (the interface is fixed-width); coverage metrics count the
+    kept assignments.
+    """
+    n, m = s.shape
+    gates, _ = expert_choice_route(s, top_k)  # (n, m) gate values on pairs
+    w, idx = lax.top_k(gates, top_k)
+    selected = w > 0.0
+    idx = jnp.where(selected, idx, m).astype(jnp.int32)
+    w = jnp.where(selected, w, 0.0)
+    if norm_topk_prob:
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx

@@ -1,0 +1,82 @@
+"""Latent Prototype Routing (arxiv 2506.21328) — prototype-assignment gating.
+
+LPR reframes routing as online clustering in the gate-score simplex: each
+expert j owns a learned prototype p_j, and a token's affinity to expert j is
+its (squared-distance) closeness to p_j rather than the raw gate score
+alone. With score row s_i, the affinity
+
+    a_ij = −‖s_i − p_j‖² = 2 s_i·p_j − ‖p_j‖² − ‖s_i‖²
+
+drops the per-token constant ‖s_i‖² (it shifts every expert's affinity for
+token i equally, so top-k is invariant), and selection runs on the blend
+
+    corrected_ij = (1 − λ) · s_ij + λ · (2 s_i·p_j − ‖p_j‖²),   λ = lpr_blend.
+
+Prototypes track their assigned tokens with a gradient-free EMA k-means
+step over the batch's selections:
+
+    p_j ← d · p_j + (1 − d) · mean{ s_i : j ∈ topk(i) },   d = lpr_decay,
+
+with empty clusters carried through unchanged. Under cfg.sync='global' the
+assignment counts and score sums are psum-reduced over the data axes before
+the division, so every shard applies the same prototype step (bit-identical
+replicated state); masked serving rows are excluded from both sums.
+
+State: the standard 'q' slot (carried but unused — keeps checkpoints
+strategy-portable) plus 'proto', an (m, m) leaf initialized to the identity
+(prototype j starts as the one-hot corner of expert j, which makes the
+initial affinity ranking coincide with raw-score ranking as ‖p_j‖² is then
+uniform). 'proto' is the first 2-D router-state leaf: it threads through
+the generic pytree machinery (layer stacking, replicated sharding specs,
+npz checkpoints) with no special cases — that genericity is pinned by the
+checkpoint-resume bit-exactness test. The dual-health watchdog covers only
+the (m,)-shaped 'q' slot; a poisoned prototype matrix would need a reset to
+identity rather than zeros, so 'proto' is deliberately outside guard_keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.balancers import Balancer, register_balancer
+
+
+@register_balancer("lpr")
+class LPRBalancer(Balancer):
+    """Prototype-assignment gate with an EMA k-means prototype update."""
+
+    uses_sync = True
+    # EP paths under sync='local' average BOTH carried leaves across data
+    # shards, so the replicated-state invariant holds for 'proto' too
+    local_avg_keys = ("q", "proto")
+
+    def init_state(self, cfg):
+        return {
+            "q": jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype),
+            "proto": jnp.eye(cfg.n_experts, dtype=cfg.router_dtype),
+        }
+
+    def score_adjust(self, s, state, cfg, *, token_mask=None, axis_names=(),
+                     local_shards=1):
+        proto = state["proto"]  # (m, m): row j = prototype of expert j
+        affinity = 2.0 * (s @ proto.T) - jnp.sum(proto * proto, axis=-1)[None, :]
+        lam = cfg.lpr_blend
+        return (1.0 - lam) * s + lam * affinity, {}
+
+    def update_state(self, s, idx, state, cfg, *, token_mask=None, axis_names=()):
+        m = s.shape[-1]
+        onehot = jax.nn.one_hot(idx, m, dtype=cfg.router_dtype)  # (n, k, m)
+        if token_mask is not None:
+            onehot = onehot * token_mask.astype(cfg.router_dtype)[:, None, None]
+        assign = lax.stop_gradient(onehot.sum(axis=1))  # (n, m)
+        counts = assign.sum(axis=0)  # (m,)
+        sums = assign.T @ lax.stop_gradient(s)  # (m, m): Σ s_i over cluster j
+        if axis_names:
+            counts = lax.psum(counts, axis_names)
+            sums = lax.psum(sums, axis_names)
+        proto = state["proto"]
+        mean = sums / jnp.maximum(counts, 1.0)[:, None]
+        target = jnp.where((counts > 0.0)[:, None], mean, proto)
+        d = cfg.lpr_decay
+        return {"proto": d * proto + (1.0 - d) * target}

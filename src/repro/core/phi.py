@@ -1,0 +1,51 @@
+"""φ-Balancing (arxiv 2605.15403) — gradient-free multiplicative gate correction.
+
+Where Loss-Free adds a bias to the selection scores and BIP subtracts a dual
+price, φ-Balancing rescales each expert's gate multiplicatively: the carried
+log-correction φ_j shrinks over-loaded experts' scores by exp(-φ_j) and the
+per-batch update integrates the relative load error,
+
+    corrected_ij = s_ij · exp(-φ_j)
+    φ_j        += φ_lr · (Load_j / mean_load − 1)
+    φ          −= mean(φ)                       (recentring)
+
+The recentring keeps φ bounded without changing any selection: a uniform
+shift of φ multiplies every corrected score by the same exp(c) > 0, and
+top-k is invariant to a positive uniform scaling. Like Loss-Free the update
+is gradient-free (gate VALUES stay the raw scores, so φ receives no
+gradient), but the correction is proportional rather than additive, so its
+strength follows the score scale instead of competing with it — relevant
+for sigmoid scoring where additive biases can dominate small scores.
+
+The carried φ lives in the shared 'q' state slot ((m,) like the BIP dual /
+Loss-Free bias), so checkpoints, layer stacking, sharding specs, and the
+dual-health watchdog all apply unchanged. Under cfg.sync='global' the load
+histogram is psum-reduced over the data axes before the update, so every
+shard integrates the same error and φ stays bit-identical across devices;
+masked serving rows are excluded from the histogram (token_mask) exactly as
+for Loss-Free.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.balancers import Balancer, register_balancer, selection_load
+
+
+@register_balancer("phi")
+class PhiBalancer(Balancer):
+    """Multiplicative gate correction with an integrating load-error update."""
+
+    uses_sync = True
+
+    def score_adjust(self, s, state, cfg, *, token_mask=None, axis_names=(),
+                     local_shards=1):
+        return s * jnp.exp(-state["q"])[None, :], {}
+
+    def update_state(self, s, idx, state, cfg, *, token_mask=None, axis_names=()):
+        m = s.shape[-1]
+        load = selection_load(idx, m, cfg.router_dtype, token_mask, axis_names)
+        # masked serving chunks can be entirely padding -> zero mean load
+        mean_load = jnp.maximum(load.mean(), 1e-9)
+        phi = state["q"] + cfg.phi_lr * (load / mean_load - 1.0)
+        return {"q": phi - phi.mean()}

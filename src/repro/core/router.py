@@ -1,15 +1,17 @@
-"""Unified top-k router with all three balancing strategies from the paper.
+"""Unified top-k router — a thin orchestrator over the balancer registry.
 
-One API for:
-  * 'topk'      — vanilla top-k (no balancing; the collapse-prone baseline)
-  * 'aux_loss'  — Loss-Controlled (GShard/Switch auxiliary loss, α·Σ f_j P_j)
-  * 'lossfree'  — Loss-Free (Wang et al. 2024): per-batch sign update of bias b
-  * 'bip'       — BIP-Based Balancing (this paper): per-gate ADMM dual update of q
+`route()` resolves cfg.strategy through `core.balancers` and drives the hook
+protocol in a fixed order (score → guard → score_adjust → select → aux_loss →
+update_state → metrics); every balancing method — the paper's four
+(topk / aux_loss / lossfree / bip) and the registry additions (phi / lpr /
+expert_choice) — plugs in behind the same call. See core/balancers.py for
+the protocol and the per-method semantics.
 
 All strategies share RouterState {'q': (m,)}; for 'lossfree' the vector plays
-the role of the bias b (added), for 'bip' the dual price q (subtracted). Gate
-*values* are always the raw scores of the selected experts, so neither vector
-receives gradient — only 'aux_loss' shapes gradients, via its explicit loss.
+the role of the bias b (added), for 'bip' the dual price q (subtracted), for
+'phi' the multiplicative log-correction. Gate *values* are always the raw
+scores of the selected experts, so none of these vectors receive gradient —
+only 'aux_loss' shapes gradients, via its explicit loss.
 
 The router is functional: `route(logits, state, cfg)` returns RouterOutput with
 the new state; the training loop threads state through like any other pytree.
@@ -29,15 +31,13 @@ per-shard semantics by vmapping the dual update over token groups.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import ref_bip
-from repro.core.metrics import balance_metrics
+from repro.core import balancers, ref_bip
 from repro.core.types import RouterConfig, RouterOutput, init_router_state
 
 
@@ -160,63 +160,6 @@ def compute_scores(logits: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
     return jax.nn.sigmoid(logits)
 
 
-def _topk_select(
-    s: jnp.ndarray, corrected: jnp.ndarray, cfg: RouterConfig
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-k on `corrected` scores, gate values gathered from raw `s`."""
-    _, idx = lax.top_k(corrected, cfg.top_k)
-    w = jnp.take_along_axis(s, idx, axis=-1)
-    if cfg.norm_topk_prob:
-        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
-    return w, idx.astype(jnp.int32)
-
-
-def _aux_loss(
-    s: jnp.ndarray, idx: jnp.ndarray, cfg: RouterConfig, token_mask=None
-) -> jnp.ndarray:
-    """L_balance = α Σ_j f_j P_j (Loss-Controlled method).
-
-    f_j = m/(k n) Σ_i δ_ij  (token fraction, non-differentiable -> stopped),
-    P_j = 1/n Σ_i s_ij      (mean gate score, carries the gradient).
-    With token_mask, both means run over the real rows only.
-    """
-    n, m = s.shape
-    onehot = jax.nn.one_hot(idx, m, dtype=s.dtype)  # (n, k, m)
-    if token_mask is not None:
-        w = token_mask.astype(s.dtype)
-        n_eff = jnp.maximum(jnp.sum(w), 1.0)
-        f = lax.stop_gradient((onehot * w[:, None, None]).sum(axis=(0, 1))) * (
-            m / (cfg.top_k * n_eff)
-        )
-        p_mean = jnp.sum(s * w[:, None], axis=0) / n_eff
-    else:
-        f = lax.stop_gradient(onehot.sum(axis=(0, 1))) * (m / (cfg.top_k * n))
-        p_mean = s.mean(axis=0)
-    return cfg.aux_loss_alpha * jnp.sum(f * p_mean)
-
-
-_warned: set = set()
-
-
-def _warn_once(key: str, msg: str) -> None:
-    """Emit a config-degradation warning once per process (trace-time)."""
-    if key not in _warned:
-        _warned.add(key)
-        warnings.warn(msg, stacklevel=3)
-
-
-def _bip_q(s: jnp.ndarray, q0: jnp.ndarray, cfg: RouterConfig) -> jnp.ndarray:
-    """Dispatch the ADMM dual update to the reference or the Pallas kernel."""
-    if cfg.use_kernel:
-        from repro.kernels import ops as kernel_ops  # lazy: avoid import cycle
-
-        return kernel_ops.bip_dual_update(
-            s, q0, top_k=cfg.top_k, n_iters=cfg.bip_iters
-        )
-    q, _ = ref_bip.bip_dual_update(s, q0, top_k=cfg.top_k, n_iters=cfg.bip_iters)
-    return q
-
-
 def route(
     logits: jnp.ndarray,
     state: Dict[str, jnp.ndarray],
@@ -228,150 +171,72 @@ def route(
     """Route a flattened batch of tokens.
 
     logits: (n, m) router logits (pre-gating-function).
-    state:  {'q': (m,)} carried vector (ADMM warm start / Loss-Free bias);
-      with cfg.forecast also {'q_ema', 'q_err'} (m,) dual-forecaster EMAs.
-      Unrecognized keys pass through untouched.
+    state:  {'q': (m,)} carried vector (ADMM warm start / Loss-Free bias /
+      φ-correction); methods add their own leaves (bip forecast:
+      'q_ema'/'q_err' EMAs; lpr: 'proto' prototype matrix). Unrecognized
+      keys pass through untouched.
     token_mask: optional (n,) bool — serving padding rows are False; they
       still get selections (static shapes) but are excluded from every
       state update and loss, so the carried q tracks real traffic only
       even when decode-heavy chunks are mostly padding (DESIGN.md §Serving).
+      Strategies whose selection is not per-token causal (expert_choice)
+      reject the masked/serving path outright.
     """
     n, m = logits.shape
     assert m == cfg.n_experts, (m, cfg.n_experts)
+    bal = balancers.get_balancer(cfg.strategy)
+    bal.check_config(cfg)
+    if token_mask is not None and not bal.serving_ok:
+        raise NotImplementedError(
+            f"strategy {cfg.strategy!r} is training-only: its selection for "
+            "one token depends on the whole batch (an expert's top-C can "
+            "evict a token when later tokens arrive), so the masked "
+            "serving/decode path would break causality."
+        )
     s = compute_scores(logits, cfg)
-    q0 = state["q"]
-    aux = jnp.zeros((), dtype=cfg.router_dtype)
-    new_q = q0
-    # carry every state key through unchanged unless a branch updates it, so
+    # carry every state key through unchanged unless a hook updates it, so
     # the router-state pytree structure is stable across scan/loop carries
     new_state = dict(state)
 
     if cfg.guard_duals:
-        # dual-health watchdog: q and the forecaster EMAs are one coupled
-        # carry, so any non-finite/runaway entry in any of them resets the
-        # whole layer to safe init (zeros — the fresh-layer warm start).
-        # jnp.where on the scalar verdict keeps healthy carries bitwise
-        # unchanged, so the watchdog is free to leave enabled.
-        fkeys = [k for k in ("q_ema", "q_err") if k in state]
-        stacked = jnp.concatenate([q0] + [state[k] for k in fkeys]) if fkeys else q0
+        # dual-health watchdog: the balancer's guarded keys (q, plus e.g.
+        # the bip forecaster EMAs) are one coupled carry, so any
+        # non-finite/runaway entry in any of them resets them all to safe
+        # init (zeros — the fresh-layer warm start). jnp.where on the
+        # scalar verdict keeps healthy carries bitwise unchanged, so the
+        # watchdog is free to leave enabled.
+        gkeys = bal.guard_keys(state)
+        vecs = [state[k] for k in gkeys]
+        stacked = jnp.concatenate(vecs) if len(vecs) > 1 else vecs[0]
         _, dual_healthy = ref_bip.sanitize_duals(stacked, cfg.dual_abs_limit)
-        q0 = jnp.where(dual_healthy, q0, jnp.zeros_like(q0))
-        for k in fkeys:
+        for k in gkeys:
             new_state[k] = jnp.where(
                 dual_healthy, state[k], jnp.zeros_like(state[k])
             )
-        state = new_state  # the forecaster below must read the sanitized carry
-        new_q = q0
+        # the hooks below must read the sanitized carry (a copy, so later
+        # new_state updates cannot leak into the hooks' view of `state`)
+        state = dict(new_state)
 
-    # sync='global': the dual update runs with psum-reduced counts over the
-    # data axes, so q converges identically on every shard (DESIGN.md
-    # §Global-sync). Empty data_axes (single device, or a caller outside
-    # shard_map) degrades to the plain per-batch update.
+    # sync='global': state updates run with psum-reduced statistics over the
+    # data axes, so the carried state converges identically on every shard
+    # (DESIGN.md §Global-sync). Empty data_axes (single device, or a caller
+    # outside shard_map) degrades to the plain per-batch update.
     global_axes = tuple(cfg.data_axes) if cfg.sync == "global" else ()
 
-    if cfg.strategy == "bip":
-        if cfg.forecast and (cfg.sync != "global" or cfg.use_kernel):
-            _warn_once(
-                "forecast-inactive",
-                "RouterConfig.forecast only drives the reference sync='global' "
-                "bisection path; with sync='local' or use_kernel=True the "
-                "forecaster state is carried but never consulted.",
-            )
-        if cfg.sync == "global" and cfg.use_kernel and token_mask is None:
-            # collective Pallas path: the kernel's (m, n_bins) histogram
-            # counts are psum'd across cfg.data_axes between the count pass
-            # and the rank location, so the kernel now has a true global
-            # form (kernels/ops.py). Empty data_axes degrades to the plain
-            # single-device kernel.
-            from repro.kernels import ops as kernel_ops  # lazy: import cycle
-
-            q = kernel_ops.bip_dual_update(
-                lax.stop_gradient(s), q0,
-                top_k=cfg.top_k, n_iters=cfg.bip_iters,
-                axis_names=global_axes,
-            )
-            corrected = s - q[None, :]
-            new_q = q
-        elif cfg.sync == "global" or token_mask is not None:
-            # one implementation serves the mesh path (axis_names), the
-            # serving path (token_mask), AND the unsharded sync='global'
-            # reference (axes=()): all three share the bisection numerics,
-            # so a sharded global-sync run reproduces the single-device
-            # trajectory bit-for-bit at the dual level — the sort-based
-            # update would instead park q exactly ON the capacity-marginal
-            # token's score and make the comparison tie-degenerate.
-            if cfg.use_kernel:  # only reachable with a token mask
-                _warn_once(
-                    "kernel-masked",
-                    "use_kernel=True has no masked (serving-padding) form; "
-                    "falling back to the reference masked dual update.",
-                )
-            # load forecaster: predict the pre-clamp order statistic t from
-            # its EMA, bracket it by the EMA'd error, and let the bisection
-            # validate the bracket in-band (free when stale, rounds saved
-            # when right)
-            use_forecast = cfg.forecast and not cfg.use_kernel and "q_ema" in state
-            window = None
-            if use_forecast:
-                half = cfg.forecast_margin * state["q_err"] + cfg.forecast_floor
-                window = (state["q_ema"] - half, state["q_ema"] + half)
-            # scores are softmax/sigmoid outputs, so [0, 1] is a static
-            # bracket: no data-dependent (pmin/pmax) bound collectives
-            q, _, t = ref_bip.bip_dual_update_global(
-                lax.stop_gradient(s), q0,
-                top_k=cfg.top_k, n_iters=cfg.bip_iters,
-                token_mask=token_mask, axis_names=global_axes,
-                n_bisect=cfg.n_bisect, fanout=cfg.bisect_fanout,
-                score_bounds=(0.0, 1.0), window=window, with_stats=True,
-            )
-            if use_forecast:
-                d = cfg.forecast_decay
-                err = jnp.abs(t - state["q_ema"])
-                new_state["q_ema"] = d * state["q_ema"] + (1.0 - d) * t
-                new_state["q_err"] = d * state["q_err"] + (1.0 - d) * err
-            corrected = s - q[None, :]
-            new_q = q
-        elif local_shards > 1 and cfg.sync == "local":
-            s_grp = lax.stop_gradient(s).reshape(local_shards, n // local_shards, m)
-            q_grp = jax.vmap(lambda sg: _bip_q(sg, q0, cfg))(s_grp)  # (S, m)
-            corrected = (
-                s.reshape(local_shards, -1, m) - q_grp[:, None, :]
-            ).reshape(n, m)
-            new_q = q_grp.mean(axis=0)  # replicated warm start for next batch
-        else:
-            q = _bip_q(lax.stop_gradient(s), q0, cfg)
-            corrected = s - q[None, :]
-            new_q = q
-        w, idx = _topk_select(s, corrected, cfg)
-        if not cfg.bip_warm_start:
-            new_q = jnp.zeros_like(q0)
-
-    elif cfg.strategy == "lossfree":
-        # bias is ADDED to scores for selection (Wang et al. eq. for g').
-        corrected = s + q0[None, :]
-        w, idx = _topk_select(s, corrected, cfg)
-        # Per-batch sign update: b += u * sign(mean_load - load_j).
-        onehot = jax.nn.one_hot(idx, m, dtype=cfg.router_dtype)
-        if token_mask is not None:
-            onehot = onehot * token_mask.astype(cfg.router_dtype)[:, None, None]
-        load = lax.stop_gradient(onehot.sum(axis=(0, 1)))
-        if global_axes:
-            # global sign update: every shard sees the same selection
-            # histogram, so the carried bias stays bit-identical across
-            # devices (vs pmean-averaging per-shard sign updates)
-            load = lax.psum(load, global_axes)
-        err = load.mean() - load
-        new_q = q0 + cfg.lossfree_lr * jnp.sign(err)
-
-    elif cfg.strategy == "aux_loss":
-        w, idx = _topk_select(s, s, cfg)
-        aux = _aux_loss(s, idx, cfg, token_mask)
-
-    else:  # 'topk'
-        w, idx = _topk_select(s, s, cfg)
-
-    metrics = balance_metrics(idx, m, cfg.top_k)
-    new_state["q"] = new_q
+    corrected, pre_updates = bal.score_adjust(
+        s, state, cfg,
+        token_mask=token_mask, axis_names=global_axes,
+        local_shards=local_shards,
+    )
+    new_state.update(pre_updates)
+    w, idx = bal.select(s, corrected, cfg)
+    aux = bal.aux_loss(s, idx, cfg, token_mask)
+    new_state.update(
+        bal.update_state(
+            s, idx, state, cfg, token_mask=token_mask, axis_names=global_axes
+        )
+    )
+    metrics = balancers.router_metrics(bal, s, w, idx, cfg)
     return RouterOutput(
         combine_weights=w,
         expert_index=idx,

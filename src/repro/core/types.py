@@ -20,7 +20,11 @@ class RouterConfig:
     Attributes:
       n_experts: m, number of routed experts.
       top_k: k, experts chosen per token.
-      strategy: one of 'topk' | 'aux_loss' | 'lossfree' | 'bip'.
+      strategy: any name in the balancer registry (core/balancers.py) —
+        'topk' | 'aux_loss' | 'lossfree' | 'bip' | 'phi' | 'lpr' |
+        'expert_choice' as shipped; validation resolves through
+        `balancers.get_balancer`, so registering a new method makes it a
+        valid strategy everywhere at once.
       bip_iters: T in Algorithm 1 (ADMM dual iterations per gate invocation).
       bip_warm_start: carry q across batches (paper: q is maintained per layer).
       aux_loss_alpha: α for the Loss-Controlled method.
@@ -60,6 +64,13 @@ class RouterConfig:
       dual_abs_limit: |q| runaway threshold for guard_duals. Softmax scores
         live in [0, 1] and useful duals in roughly [-1, 1], so the default
         is far outside any trajectory a healthy run produces.
+      phi_lr: φ-Balancing integration rate for the multiplicative
+        log-correction update (strategy='phi').
+      lpr_decay: EMA decay d of the Latent-Prototype-Routing k-means
+        prototype update (strategy='lpr').
+      lpr_blend: λ ∈ [0, 1] mixing raw scores with prototype affinities in
+        the LPR selection scores (0 = raw top-k, 1 = pure prototype
+        assignment).
     """
 
     n_experts: int
@@ -83,10 +94,17 @@ class RouterConfig:
     forecast_floor: float = 1e-3
     guard_duals: bool = False
     dual_abs_limit: float = 100.0
+    phi_lr: float = 0.01
+    lpr_decay: float = 0.99
+    lpr_blend: float = 0.5
 
     def __post_init__(self):
-        if self.strategy not in ("topk", "aux_loss", "lossfree", "bip"):
-            raise ValueError(f"unknown routing strategy {self.strategy!r}")
+        # strategy names resolve through the balancer registry — one
+        # validation path for configs, CLIs, and sweeps (lazy import:
+        # balancers imports RouterConfig from this module)
+        from repro.core import balancers
+
+        balancers.get_balancer(self.strategy)
         if not (0 < self.top_k <= self.n_experts):
             raise ValueError("need 0 < top_k <= n_experts")
         if self.score_fn not in ("softmax", "sigmoid"):
@@ -105,27 +123,29 @@ class RouterConfig:
             raise ValueError(
                 f"dual_abs_limit must be > 0, got {self.dual_abs_limit}"
             )
+        if self.phi_lr <= 0.0:
+            raise ValueError(f"phi_lr must be > 0, got {self.phi_lr}")
+        if not (0.0 <= self.lpr_decay < 1.0):
+            raise ValueError(f"lpr_decay must be in [0, 1), got {self.lpr_decay}")
+        if not (0.0 <= self.lpr_blend <= 1.0):
+            raise ValueError(f"lpr_blend must be in [0, 1], got {self.lpr_blend}")
 
 
 def init_router_state(cfg: RouterConfig) -> Dict[str, Array]:
     """Per-gate mutable state, carried through the training loop as a pytree.
 
-    'q' doubles as the Loss-Free bias vector b (same shape, same role: an
-    additive correction that reorders top-k), so checkpoints are strategy
-    portable.
-
-    With cfg.forecast on the BIP strategy, the state also carries the dual
-    forecaster: 'q_ema' (EMA of the pre-clamp order statistic t) and
-    'q_err' (EMA of |t - prediction|). Both are (m,) like q, so the
-    generic pytree machinery (tiling into layer stacks, replicated specs,
-    npz checkpoints) covers them with no special cases — and bit-exact
-    checkpoint resume requires them to be saved/restored alongside q.
+    Delegates to the registered balancer's `init_state` hook. Every method
+    carries the (m,) 'q' slot (the ADMM warm start / Loss-Free bias /
+    φ-correction), so checkpoints are strategy-portable; methods add their
+    own leaves on top — bip's forecaster EMAs ('q_ema'/'q_err', (m,)),
+    lpr's prototype matrix ('proto', (m, m)). All leaves ride the generic
+    pytree machinery (tiling into layer stacks, replicated specs, npz
+    checkpoints) with no special cases — and bit-exact checkpoint resume
+    requires them to be saved/restored alongside q.
     """
-    state = {"q": jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)}
-    if cfg.strategy == "bip" and cfg.forecast:
-        state["q_ema"] = jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)
-        state["q_err"] = jnp.zeros((cfg.n_experts,), dtype=cfg.router_dtype)
-    return state
+    from repro.core import balancers  # lazy: balancers imports this module
+
+    return balancers.get_balancer(cfg.strategy).init_state(cfg)
 
 
 import jax

@@ -105,7 +105,10 @@ def _build_data_stream(cfg, args, faults=None):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--method", default=None, choices=[None, "bip", "lossfree", "aux_loss", "topk"])
+    ap.add_argument("--strategy", "--method", dest="strategy", default=None,
+                    help="routing strategy override; any name in the "
+                         "balancer registry (repro.core.registered_balancers; "
+                         "--method is the legacy alias)")
     ap.add_argument("--bip-iters", type=int, default=None)
     ap.add_argument("--sync", default=None, choices=["local", "global"],
                     help="BIP dual sync across data shards on a mesh: 'local' "
@@ -218,15 +221,25 @@ def main(argv=None):
     from repro.training import train_loop
     from repro.training.loop import evaluate_ppl
 
+    if args.strategy is not None:
+        # resolve through the balancer registry so unknown names fail here
+        # with the registered list, not deep inside config construction
+        from repro.core import get_balancer
+
+        try:
+            get_balancer(args.strategy)
+        except ValueError as e:
+            ap.error(str(e))
+
     cfg = configs.reduced_for_smoke(args.arch) if args.reduced else configs.get(args.arch)
     if (
-        args.method or args.bip_iters or args.sync or args.n_bisect
+        args.strategy or args.bip_iters or args.sync or args.n_bisect
         or args.bisect_fanout or args.forecast or args.guard_duals
         or args.forecast_decay is not None or args.forecast_margin is not None
     ):
         routing = dataclasses.replace(
             cfg.routing,
-            strategy=args.method or cfg.routing.strategy,
+            strategy=args.strategy or cfg.routing.strategy,
             bip_iters=args.bip_iters or cfg.routing.bip_iters,
             sync=args.sync or cfg.routing.sync,
             n_bisect=args.n_bisect or cfg.routing.n_bisect,

@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import metrics as core_metrics
-from repro.core import make_dispatch_plan, route
+from repro.core import get_balancer, make_dispatch_plan, route
 from repro.core.types import RouterConfig
 
 Params = Dict[str, jnp.ndarray]
@@ -53,37 +53,17 @@ def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
 
 
 def router_config(cfg: ModelConfig, data_axes: Tuple[str, ...] = ()) -> RouterConfig:
-    r = cfg.routing
-    return RouterConfig(
-        n_experts=r.n_experts,
-        top_k=r.top_k,
-        strategy=r.strategy,
-        bip_iters=r.bip_iters,
-        aux_loss_alpha=r.aux_loss_alpha,
-        lossfree_lr=r.lossfree_lr,
-        norm_topk_prob=r.norm_topk_prob,
-        score_fn=r.score_fn,
-        use_kernel=r.use_kernel,
-        sync=r.sync,
-        data_axes=data_axes,
-        n_bisect=r.n_bisect,
-        bisect_fanout=r.bisect_fanout,
-        forecast=r.forecast,
-        forecast_decay=r.forecast_decay,
-        forecast_margin=r.forecast_margin,
-        forecast_floor=r.forecast_floor,
-        guard_duals=r.guard_duals,
-        dual_abs_limit=r.dual_abs_limit,
-    )
+    """RouterConfig for this model — one conversion point (RoutingSpec shim)."""
+    return cfg.routing.to_router_config(data_axes=data_axes)
 
 
 def _state_specs(router_state):
     """Replicated PartitionSpec pytree matching the router-state dict.
 
-    Every router-state leaf (q, and the forecaster EMAs when enabled) is
-    (m,) and replicated across the mesh, so the spec tree is P(None)
-    everywhere — built from the live state so new keys never need a
-    hand-written spec.
+    Every router-state leaf (q and the forecaster EMAs (m,), lpr's (m, m)
+    prototype matrix) is replicated across the mesh, so the spec tree is
+    P(None) everywhere (trailing dims pad with None) — built from the live
+    state so new keys never need a hand-written spec.
     """
     return jax.tree.map(lambda _: P(None), router_state)
 
@@ -485,13 +465,16 @@ def moe_ffn_ep2ds(
 
         # global sync: the whole state dict (q + forecaster EMAs) converged
         # identically per shard (vma-replicated, no averaging); local sync:
-        # pmean the per-shard duals into the warm start (forecaster keys
-        # are untouched by the local path and stay replicated)
+        # pmean each balancer-declared carried leaf (the bip warm-start q,
+        # lpr's prototypes) across shards so the replicated-state invariant
+        # holds — keys outside local_avg_keys (forecaster EMAs) are
+        # untouched by the local path and stay replicated
         if cfg.routing.sync == "global":
             new_state = out.state
         else:
             new_state = dict(out.state)
-            new_state["q"] = lax.pmean(out.state["q"], data_axes)
+            for key in get_balancer(cfg.routing.strategy).local_avg_keys:
+                new_state[key] = lax.pmean(out.state[key], data_axes)
         load = lax.psum(out.metrics["load"], data_axes)
         mean_load = (n_global * k) / m
         mets = {
@@ -578,11 +561,13 @@ def moe_ffn_ep(
 
         # router state: sync='global' duals already converged identically on
         # every shard (psum'd order statistics inside route, vma-replicated);
-        # sync='local' averages the per-shard duals into the warm start
-        # (forecaster keys are untouched by the local path)
+        # sync='local' averages the per-shard carried leaves (q warm start,
+        # lpr prototypes) into the replicated state — keys outside
+        # local_avg_keys (forecaster EMAs) are untouched by the local path
         if data_axes and cfg.routing.sync != "global":
             new_state = dict(out.state)
-            new_state["q"] = lax.pmean(out.state["q"], data_axes)
+            for key in get_balancer(cfg.routing.strategy).local_avg_keys:
+                new_state[key] = lax.pmean(out.state[key], data_axes)
         else:
             new_state = out.state
         # global balance metrics: sum local loads over data shards

@@ -283,7 +283,13 @@ def init_stack_router_states(cfg: ModelConfig) -> list:
         reps = n_groups + (1 if j < remainder else 0)
         if cfg.is_moe and kinds[j][1] == "moe":
             st = init_router_state(rcfg)
-            states.append(jax.tree.map(lambda a: jnp.tile(a, (reps, 1)), st))
+            # prepend the layer axis whatever the leaf rank: (m,) duals tile
+            # to (reps, m), lpr's (m, m) prototypes to (reps, m, m)
+            states.append(
+                jax.tree.map(
+                    lambda a: jnp.tile(a, (reps,) + (1,) * a.ndim), st
+                )
+            )
         else:
             states.append(None)
     return states

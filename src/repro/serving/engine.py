@@ -67,6 +67,19 @@ class ContinuousBatchingEngine:
             "continuous batching serves token-only families; use "
             "greedy_generate's legacy path for encdec/vlm"
         )
+        if cfg.is_moe:
+            from repro.core import get_balancer
+
+            if not get_balancer(cfg.routing.strategy).serving_ok:
+                # fail at construction, not deep inside the first jit trace:
+                # e.g. expert_choice selects each expert's top-C over the
+                # batch, so a token's routing depends on later tokens —
+                # incompatible with autoregressive decode
+                raise NotImplementedError(
+                    f"routing strategy {cfg.routing.strategy!r} is "
+                    "training-only (batch-dependent selection breaks decode "
+                    "causality); serve with a token-choice strategy instead"
+                )
         if cfg.window_size and any(k == "local" for k, _ in cfg.layer_kinds()):
             # a chunk must fit the sliding-window ring buffer, whose capacity
             # is min(window, max_seq_len) (common.init_attention_cache)
