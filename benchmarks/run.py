@@ -70,84 +70,142 @@ def _kernel_microbench():
     return rows
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true", help="full-length repro runs")
-    ap.add_argument("--skip-train", action="store_true", help="skip training benches")
-    args = ap.parse_args()
-
-    print("# kernel microbenchmarks", flush=True)
-    for r in _kernel_microbench():
+def _rows(rows) -> None:
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
+
+def _bench_kernels(args) -> None:
+    print("# kernel microbenchmarks", flush=True)
+    _rows(_kernel_microbench())
+
+
+def _bench_moe_dispatch(args) -> None:
     print("# MoE dispatch: sort-based ragged plan vs one-hot/cumsum", flush=True)
     from benchmarks import moe_dispatch
 
-    for r in moe_dispatch.run(smoke=not args.full):
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    _rows(moe_dispatch.run(smoke=not args.full))
 
+
+def _bench_router_overhead(args) -> None:
     print("# router overhead (paper: 'very small time costs')", flush=True)
     from benchmarks import router_overhead
 
-    for r in router_overhead.run():
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
-
+    _rows(router_overhead.run())
     print("# router dual sync sweep on a 4x2 mesh (BENCH_router_sync.json)", flush=True)
-    for r in router_overhead.run_sync_sweep(smoke=not args.full):
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    _rows(router_overhead.run_sync_sweep(smoke=not args.full))
 
-    if not args.skip_train:
-        print("# paper tables 2/3 reproduction (reduced scale)", flush=True)
-        from benchmarks import paper_repro
 
-        steps = 300 if args.full else 120
-        tables = paper_repro.main(steps=steps)
-        for tbl in tables:
-            for r in tbl["rows"]:
-                print(
-                    f"{tbl['table']}_{r['strategy']},{r['train_wall_s'] * 1e6:.0f},"
-                    f"AvgMaxVio={r['AvgMaxVio']};SupMaxVio={r['SupMaxVio']};"
-                    f"ppl={r['perplexity']}",
-                    flush=True,
-                )
+def _bench_paper_repro(args) -> None:
+    if args.skip_train:
+        return
+    print("# paper tables 2/3 reproduction (reduced scale)", flush=True)
+    from benchmarks import paper_repro
 
-    if not args.skip_train:
-        print("# per-step balance-method sweep (paper's step-wise MaxVio lens)", flush=True)
-        from benchmarks import balance_sweep
+    steps = 300 if args.full else 120
+    tables = paper_repro.main(steps=steps)
+    for tbl in tables:
+        for r in tbl["rows"]:
+            print(
+                f"{tbl['table']}_{r['strategy']},{r['train_wall_s'] * 1e6:.0f},"
+                f"AvgMaxVio={r['AvgMaxVio']};SupMaxVio={r['SupMaxVio']};"
+                f"ppl={r['perplexity']}",
+                flush=True,
+            )
 
-        for r in balance_sweep.run(smoke=not args.full):
-            print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
 
-    if not args.skip_train:
-        print("# streaming data pipeline (host tokens/s, prefetch overlap)", flush=True)
-        from benchmarks import data_pipeline
+def _bench_balance_sweep(args) -> None:
+    if args.skip_train:
+        return
+    print("# per-step balance-method sweep (paper's step-wise MaxVio lens)", flush=True)
+    from benchmarks import balance_sweep
 
-        for r in data_pipeline.run(smoke=not args.full):
-            print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    _rows(balance_sweep.run(smoke=not args.full))
 
+
+def _bench_data_pipeline(args) -> None:
+    if args.skip_train:
+        return
+    print("# streaming data pipeline (host tokens/s, prefetch overlap)", flush=True)
+    from benchmarks import data_pipeline
+
+    _rows(data_pipeline.run(smoke=not args.full))
+
+
+def _bench_steptime_model(args) -> None:
     print("# step-time model (>=13% saving mechanism)", flush=True)
     from benchmarks import steptime_model
 
-    for r in steptime_model.run():
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    _rows(steptime_model.run())
 
+
+def _bench_capacity_ablation(args) -> None:
     print("# capacity-factor ablation (drops vs cf per strategy)", flush=True)
     from benchmarks import capacity_ablation
 
-    for r in capacity_ablation.run():
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    _rows(capacity_ablation.run())
 
+
+def _bench_expert_choice(args) -> None:
     print("# BIP vs Expert-Choice (beyond-paper comparison)", flush=True)
     from benchmarks import expert_choice_compare
 
-    for r in expert_choice_compare.main():
-        print(f"{r['name']},{r['us_per_call']},{r['derived']}", flush=True)
+    _rows(expert_choice_compare.main())
 
+
+def _bench_telemetry_overhead(args) -> None:
+    if args.skip_train:
+        return
+    print("# telemetry overhead (instrumented vs bare train step)", flush=True)
+    from benchmarks import telemetry_overhead
+
+    _rows(telemetry_overhead.run(smoke=not args.full))
+
+
+def _bench_roofline(args) -> None:
     if os.path.exists("dryrun_results_single.jsonl"):
         print("# roofline (from dry-run artifacts)", flush=True)
         from benchmarks import roofline
 
         roofline.main(["dryrun_results_single.jsonl"])
+
+
+# registry: name -> section runner; `python -m benchmarks.run NAME [NAME..]`
+# runs a subset, no names runs everything in order
+BENCHES = {
+    "kernels": _bench_kernels,
+    "moe_dispatch": _bench_moe_dispatch,
+    "router_overhead": _bench_router_overhead,
+    "paper_repro": _bench_paper_repro,
+    "balance_sweep": _bench_balance_sweep,
+    "data_pipeline": _bench_data_pipeline,
+    "steptime_model": _bench_steptime_model,
+    "capacity_ablation": _bench_capacity_ablation,
+    "expert_choice": _bench_expert_choice,
+    "telemetry_overhead": _bench_telemetry_overhead,
+    "roofline": _bench_roofline,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benchmarks", nargs="*", metavar="NAME",
+                    help="benchmark(s) to run (default: all); one of: "
+                         + ", ".join(BENCHES))
+    ap.add_argument("--full", action="store_true", help="full-length repro runs")
+    ap.add_argument("--skip-train", action="store_true", help="skip training benches")
+    args = ap.parse_args(argv)
+
+    unknown = [n for n in args.benchmarks if n not in BENCHES]
+    if unknown:
+        ap.error(
+            f"unknown benchmark(s): {', '.join(sorted(unknown))}. "
+            f"Registered benchmarks: {', '.join(BENCHES)}"
+        )
+
+    selected = args.benchmarks or list(BENCHES)
+    for name in selected:
+        BENCHES[name](args)
 
 
 if __name__ == "__main__":

@@ -167,14 +167,11 @@ def main(argv=None):
             (a, rng.integers(0, cfg.vocab_size, (plen,)), gen)
         )
 
-    # warm the trace (one tiny request), then reset telemetry
+    # warm the trace (one tiny request), then reset telemetry so the
+    # measured phase starts from clean counters and SLO histograms
     r = eng.submit([1, 2, 3], 2, ignore_eos=True)
     eng.run()
-    eng.n_steps = 0
-    eng.prefill_tokens = eng.decode_tokens = 0
-    eng.expert_load[:] = 0
-    eng.max_vio_per_step.clear()
-    eng.n_deadline_missed = eng.n_shed = 0
+    eng.telemetry.reset()
 
     t0 = time.perf_counter()
     pending = list(reqs)
@@ -199,6 +196,13 @@ def main(argv=None):
     print(f"serve_deadline_miss_rate,,{miss_rate:.3f} "
           f"({eng.n_deadline_missed}/{args.requests})")
     print(f"serve_shed,,{eng.n_shed}")
+    slo = eng.telemetry.summary()
+    print(f"serve_ttft_p50,{1e6 * slo['ttft']['p50']:.2f},"
+          f"p99 {1e3 * slo['ttft']['p99']:.2f} ms")
+    print(f"serve_itl_p50,{1e6 * slo['itl']['p50']:.2f},"
+          f"p99 {1e3 * slo['itl']['p99']:.2f} ms")
+    print(f"serve_queue_depth,,max {slo['queue_depth_max']} "
+          f"mean {slo['queue_depth_mean']:.1f}")
     maxvio = None
     if cfg.is_moe:
         load = eng.expert_load
@@ -231,6 +235,12 @@ def main(argv=None):
             "deadline_miss_rate": miss_rate,
             "n_shed": eng.n_shed,
             "expert_maxvio": maxvio,
+            # SLO histograms (telemetry/slo.py): quantiles + sparse buckets
+            "ttft": slo["ttft"],
+            "itl": slo["itl"],
+            "queue_wait": slo["queue_wait"],
+            "queue_depth_max": slo["queue_depth_max"],
+            "queue_depth_mean": slo["queue_depth_mean"],
         }
         with open(args.out_json, "w") as f:
             json.dump(record, f, indent=2)

@@ -6,9 +6,13 @@ resolves `cfg.strategy` here and calls the hook protocol:
 
     init_state(cfg)                      -> per-layer carried state dict
     score_adjust(s, state, cfg, ...)     -> (corrected scores, state updates)
+                                            or (corrected, updates, telemetry)
                                             [pre-selection: dual solves,
                                              bias/multiplier application,
-                                             prototype affinities]
+                                             prototype affinities; the
+                                             optional telemetry dict of
+                                             already-computed health scalars
+                                             is folded into the metrics]
     select(s, corrected, cfg)            -> (combine_weights, expert_index)
                                             [token top-k by default;
                                              expert-choice overrides]
@@ -340,6 +344,9 @@ class BIPBalancer(Balancer):
         n, m = s.shape
         q0 = state["q"]
         updates: State = {}
+        # telemetry: dual-health scalars route() folds into the metrics —
+        # strictly values the solve already produced (no extra collectives)
+        tel: State = {}
         if cfg.sync == "global" and cfg.use_kernel and token_mask is None:
             # collective Pallas path: the kernel's (m, n_bins) histogram
             # counts are psum'd across the data axes between the count pass
@@ -391,6 +398,14 @@ class BIPBalancer(Balancer):
                 err = jnp.abs(t - state["q_ema"])
                 updates["q_ema"] = d * state["q_ema"] + (1.0 - d) * t
                 updates["q_err"] = d * state["q_err"] + (1.0 - d) * err
+                # instantaneous forecast quality: mean |t - prediction| and
+                # the fraction of experts whose pre-clamp statistic landed
+                # inside the warm-start bracket (window-hit rate)
+                lo, hi = window
+                tel["forecast_err"] = jnp.mean(err)
+                tel["forecast_hit"] = jnp.mean(
+                    ((t >= lo) & (t <= hi)).astype(jnp.float32)
+                )
             corrected = s - q[None, :]
             updates["q"] = q
         elif local_shards > 1 and cfg.sync == "local":
@@ -406,7 +421,7 @@ class BIPBalancer(Balancer):
             updates["q"] = q
         if not cfg.bip_warm_start:
             updates["q"] = jnp.zeros_like(q0)
-        return corrected, updates
+        return corrected, updates, tel
 
 
 @register_balancer("expert_choice")

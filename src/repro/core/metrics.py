@@ -16,9 +16,15 @@ import numpy as np
 
 
 def expert_load(expert_index: jnp.ndarray, n_experts: int) -> jnp.ndarray:
-    """Tokens matched per expert. expert_index: (..., k) int32 -> (m,) float32."""
+    """Tokens matched per expert. expert_index: (..., k) int32 -> (m,) int32.
+
+    Integer counts end-to-end (telemetry dtype audit): a count histogram is
+    exact under any cross-shard psum order, so local/global sync produce
+    bit-identical load telemetry. Out-of-range indices (the expert-choice
+    sentinel m) are dropped by the scatter, same as the float formulation.
+    """
     flat = expert_index.reshape(-1)
-    return jnp.zeros((n_experts,), jnp.float32).at[flat].add(1.0)
+    return jnp.zeros((n_experts,), jnp.int32).at[flat].add(1)
 
 
 def max_violation(load: jnp.ndarray, n_tokens: int, top_k: int) -> jnp.ndarray:
@@ -31,7 +37,7 @@ def balance_metrics(
     expert_index: jnp.ndarray, n_experts: int, top_k: int
 ) -> Dict[str, jnp.ndarray]:
     n = int(np.prod(expert_index.shape[:-1]))
-    load = expert_load(expert_index, n_experts)
+    load = expert_load(expert_index, n_experts)  # (m,) int32 counts
     mean_load = (n * top_k) / n_experts
     frac = load / jnp.maximum(load.sum(), 1.0)
     entropy = -jnp.sum(frac * jnp.log(frac + 1e-9))

@@ -223,20 +223,36 @@ def route(
     # outside shard_map) degrades to the plain per-batch update.
     global_axes = tuple(cfg.data_axes) if cfg.sync == "global" else ()
 
-    corrected, pre_updates = bal.score_adjust(
-        s, state, cfg,
-        token_mask=token_mask, axis_names=global_axes,
-        local_shards=local_shards,
-    )
-    new_state.update(pre_updates)
-    w, idx = bal.select(s, corrected, cfg)
-    aux = bal.aux_loss(s, idx, cfg, token_mask)
-    new_state.update(
-        bal.update_state(
-            s, idx, state, cfg, token_mask=token_mask, axis_names=global_axes
+    with jax.named_scope("router/score_adjust"):
+        adjusted = bal.score_adjust(
+            s, state, cfg,
+            token_mask=token_mask, axis_names=global_axes,
+            local_shards=local_shards,
         )
-    )
-    metrics = balancers.router_metrics(bal, s, w, idx, cfg)
+    # hooks may return (corrected, updates) or (corrected, updates,
+    # telemetry): the optional third dict carries method-specific health
+    # scalars (e.g. bip forecaster error / window-hit rate) straight into
+    # the metrics — already-computed values only, never extra collectives
+    if len(adjusted) == 3:
+        corrected, pre_updates, hook_telemetry = adjusted
+    else:
+        corrected, pre_updates = adjusted
+        hook_telemetry = {}
+    new_state.update(pre_updates)
+    with jax.named_scope("router/select"):
+        w, idx = bal.select(s, corrected, cfg)
+    aux = bal.aux_loss(s, idx, cfg, token_mask)
+    with jax.named_scope("router/update_state"):
+        new_state.update(
+            bal.update_state(
+                s, idx, state, cfg, token_mask=token_mask, axis_names=global_axes
+            )
+        )
+    metrics = dict(balancers.router_metrics(bal, s, w, idx, cfg))
+    metrics.update(hook_telemetry)
+    # dual-carry magnitude: every strategy carries 'q' (bias / dual price /
+    # log-correction), so its sup-norm is a universal health signal
+    metrics["q_abs_max"] = jnp.max(jnp.abs(new_state["q"]))
     return RouterOutput(
         combine_weights=w,
         expert_index=idx,

@@ -37,6 +37,14 @@ def main(argv=None):
     ap.add_argument("--inject", action="append", default=None, metavar="SPEC",
                     help="fault injection, e.g. 'slow_step@ms=50' (decode "
                          "slowdown driving deadline misses)")
+    # telemetry flags (DESIGN.md §Observability)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="stream per-request lifecycle records + the final "
+                         "SLO summary (TTFT/ITL histograms, queue depth, "
+                         "live expert load) to this .jsonl/.csv file")
+    ap.add_argument("--profile", default=None, metavar="N:M",
+                    help="capture a jax.profiler trace of serve steps "
+                         "[N, M] into ./profile")
     args = ap.parse_args(argv)
 
     import jax
@@ -63,6 +71,9 @@ def main(argv=None):
         step_delay = faults.step_delay()
         print("injecting: " + "; ".join(f.describe() for f in faults.faults))
 
+    from repro.telemetry import open_sink, profile_window
+
+    sink = open_sink(args.telemetry)
     max_seq_len = args.max_seq_len or (args.prompt_len + args.gen + 1)
     eng = ContinuousBatchingEngine(
         model,
@@ -78,6 +89,8 @@ def main(argv=None):
         ),
         shed_on_full=args.shed_on_full,
         step_delay=step_delay,
+        sink=sink,
+        profile=profile_window(args.profile) if args.profile else None,
     )
     rng = np.random.default_rng(0)
     reqs = []
@@ -109,6 +122,18 @@ def main(argv=None):
         load = eng.expert_load
         mean = max(load.mean(), 1e-9)
         print(f"per-expert load: {load.astype(int).tolist()} (MaxVio {load.max()/mean - 1.0:.3f})")
+    slo = eng.telemetry.emit_summary()
+    print(
+        f"SLO: ttft p50 {1e3 * slo['ttft']['p50']:.1f} ms / "
+        f"p99 {1e3 * slo['ttft']['p99']:.1f} ms, "
+        f"itl p50 {1e3 * slo['itl']['p50']:.1f} ms / "
+        f"p99 {1e3 * slo['itl']['p99']:.1f} ms, "
+        f"queue depth max {slo['queue_depth_max']}"
+    )
+    eng.close()
+    if sink is not None:
+        sink.close()
+        print(f"telemetry -> {args.telemetry}")
     return 0
 
 

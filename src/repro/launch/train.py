@@ -150,6 +150,18 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out-json", default=None,
                     help="write the run summary to this JSON file")
+    # telemetry flags (DESIGN.md §Observability)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="stream per-step metric records (per-layer expert "
+                         "load histograms, MaxVio, dual health, guard "
+                         "events) to this .jsonl/.csv file; summarize with "
+                         "`python -m repro.telemetry.metrics_report PATH`")
+    ap.add_argument("--flush-every", type=int, default=10,
+                    help="telemetry ring-buffer window: steps buffered on "
+                         "device between asynchronous host drains")
+    ap.add_argument("--profile", default=None, metavar="N:M",
+                    help="capture a jax.profiler trace of train steps "
+                         "[N, M] into ./profile (view with TensorBoard)")
     # real-text data pipeline flags
     ap.add_argument("--data", default=None,
                     help="corpus dir / glob / file of .jsonl|.txt shards "
@@ -307,20 +319,50 @@ def main(argv=None):
         batches = SyntheticBatchStream(cfg, args.batch, args.seq_len, args.steps)
         if faults is not None:
             batches = faults.wrap_stream(batches)
-    state, log = train_loop(
-        model,
-        batches,
-        lr=args.lr,
-        total_steps=args.steps,
-        log_every=args.log_every,
-        mesh=mesh,
-        microbatches=args.micro,
-        ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every or (args.steps if args.ckpt_dir else 0),
-        resume=args.resume,
-        guard=guard,
-        faults=faults,
-    )
+    telemetry = sink = None
+    if args.telemetry or args.profile:
+        from repro.telemetry import (
+            Profiler,
+            TrainTelemetry,
+            open_sink,
+            profile_window,
+        )
+
+        sink = open_sink(args.telemetry)
+        telemetry = TrainTelemetry(
+            sink=sink,
+            flush_every=args.flush_every,
+            run_meta={
+                "arch": cfg.name,
+                "strategy": cfg.routing.strategy if cfg.is_moe else None,
+                "sync": cfg.routing.sync if cfg.is_moe else None,
+                "steps": args.steps,
+                "flush_every": args.flush_every,
+            },
+            profiler=(
+                Profiler(profile_window(args.profile)) if args.profile else None
+            ),
+        )
+    try:
+        state, log = train_loop(
+            model,
+            batches,
+            lr=args.lr,
+            total_steps=args.steps,
+            log_every=args.log_every,
+            mesh=mesh,
+            microbatches=args.micro,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every or (args.steps if args.ckpt_dir else 0),
+            resume=args.resume,
+            guard=guard,
+            faults=faults,
+            telemetry=telemetry,
+        )
+    finally:
+        if sink is not None:
+            sink.close()
+            print(f"telemetry -> {args.telemetry}")
     if args.data:
         # in-sample by construction: same shards as training (only the
         # shuffle seed differs) — reported as train_corpus_ppl, not test_ppl

@@ -90,7 +90,9 @@ def _apply_encoder(
 def _merge_load(load_total, vio_max, ld, m_load):
     """Fold one MoE layer's per-expert dispatch counts into the running
     (total load, worst per-layer MaxVio) pair. MaxVio = max/mean - 1, the
-    paper's metric (same convention as core.metrics.balance_metrics)."""
+    paper's metric (same convention as core.metrics.balance_metrics).
+    Counts accumulate in int32 (telemetry dtype audit); only the MaxVio
+    ratio is float."""
     if ld is None:
         return load_total, vio_max
     mean = jnp.maximum(jnp.sum(ld) / m_load, 1e-9)
@@ -430,7 +432,7 @@ class Model:
 
         def apply_period(x, lp, lc, ls):
             new_caches, new_states = [], []
-            load = jnp.zeros((m_load,), jnp.float32)
+            load = jnp.zeros((m_load,), jnp.int32)
             vio = jnp.zeros((), jnp.float32)
             for j in range(period):
                 x, nc, st, _, ld = self._apply_layer_chunk(
@@ -469,7 +471,7 @@ class Model:
         else:
             new_caches = [None] * period
             new_states = [None] * period
-            load_total = jnp.zeros((m_load,), jnp.float32)
+            load_total = jnp.zeros((m_load,), jnp.int32)
             vio_max = jnp.zeros((), jnp.float32)
 
         # remainder layers (tail prefix of the period), applied once

@@ -36,6 +36,7 @@ from repro.configs.base import ModelConfig
 from repro.core import metrics as core_metrics
 from repro.core import get_balancer, make_dispatch_plan, route
 from repro.core.types import RouterConfig
+from repro.telemetry.trace import named_span
 
 Params = Dict[str, jnp.ndarray]
 
@@ -227,18 +228,23 @@ def moe_ffn_local(
 
     logits = jnp.einsum("nd,dm->nm", x.astype(jnp.float32), params["w_router"])
     out = route(logits, router_state, rcfg, token_mask=token_mask)
-    plan = make_dispatch_plan(out.expert_index, m, cap, token_mask)
-
-    buf = plan.pack(x)  # (m, cap, d) by gather — no one-hot, no scatter
-    y = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], buf, cfg)
-    y_tok = plan.combine(y, out.combine_weights)
+    with named_span("moe/dispatch"):
+        plan = make_dispatch_plan(out.expert_index, m, cap, token_mask)
+        buf = plan.pack(x)  # (m, cap, d) by gather — no one-hot, no scatter
+    with named_span("moe/gemm"):
+        y = _expert_ffn(
+            params["w_gate"], params["w_up"], params["w_down"], buf, cfg
+        )
+    with named_span("moe/combine"):
+        y_tok = plan.combine(y, out.combine_weights)
 
     mets = out.metrics
     if token_mask is not None:
         # balance metrics over the real tokens only (padding routes as
         # uniform filler and would flatten the reported load); the plan's
-        # segment counts already exclude masked rows
-        load = plan.counts.astype(jnp.float32)
+        # segment counts already exclude masked rows. Counts stay int32
+        # (telemetry dtype audit — no float round-trip).
+        load = plan.counts
         mean_load = jnp.maximum(
             jnp.sum(token_mask) * cfg.routing.top_k / m, 1e-9
         )
@@ -339,7 +345,10 @@ def moe_ffn_ep2d(
         aux = out.aux_loss
         if token_sharded:
             new_state = jax.tree.map(lambda v: lax.pmean(v, data_axes), new_state)
-            load = lax.pmean(load, data_axes)
+            # every data rank routed the same gathered batch, so the int32
+            # count histograms are replicated: psum // n is the exact
+            # integer identity (pmean would round-trip through float)
+            load = lax.psum(load, data_axes) // n_data_shards
             dropped = lax.pmean(dropped, data_axes)
             aux = lax.pmean(aux, data_axes)
         mean_load = (n_global * k) / m

@@ -186,6 +186,18 @@ def apply_layer(
         router_state = new_state
         aux = aux + aux_moe
         mets = {"max_vio": moe_mets["max_vio"], "load": moe_mets["load"]}
+        # optional telemetry scalars (dispatch drops, dual health, bip
+        # forecaster quality) ride along when the MoE path computed them;
+        # the EP shard_map paths surface only the fixed 3-key dict, so
+        # these are local-path-only (DESIGN.md §Observability)
+        for k in (
+            "dropped_frac_cap1",
+            "q_abs_max",
+            "forecast_err",
+            "forecast_hit",
+        ):
+            if k in moe_mets:
+                mets[k] = moe_mets[k]
 
     if mixer_kind.endswith("+shared") and shared_params is not None:
         h = common.attention(
@@ -309,7 +321,11 @@ def apply_stack(
 ) -> Tuple[jnp.ndarray, list, jnp.ndarray, Dict]:
     """Run all layers. Returns (x, new_router_states, aux_total, metrics).
 
-    metrics['max_vio_per_layer']: (n_moe_layers,) in layer order.
+    metrics['max_vio_per_layer']: (n_moe_layers,) in layer order; every
+    other column the MoE layers emit follows the same convention —
+    'load_per_layer' (n_moe_layers, m) int32 dispatch counts,
+    'dropped_frac_cap1_per_layer', 'q_abs_max_per_layer', and (bip
+    forecaster) 'forecast_err_per_layer' / 'forecast_hit_per_layer'.
 
     `rng` (optional) is the caller's per-step PRNG key; each layer receives
     a fold of it (group index threaded through the scan, position folded
@@ -321,9 +337,17 @@ def apply_stack(
     shared = params.get("shared")
 
     def period_body(x, layer_params, layer_states, group_rng=None):
-        """Apply positions j = 0..period-1 once; returns per-j aux/mets."""
+        """Apply positions j = 0..period-1 once; returns per-j aux/mets.
+
+        Per-MoE-layer metrics come back as a dict of stacked arrays
+        ({'max_vio': (n_moe,), 'load': (n_moe, m) int32, ...}) so every
+        telemetry column the layers emit is threaded through the scan —
+        the key set is identical across layers (same MoE path per model),
+        which is what lax.scan's fixed carry/output structure needs.
+        """
         x = mesh_ctx.constrain(x, mesh_ctx.batch_spec, None, None)
-        new_states, auxes, vios = [], [], []
+        new_states, auxes = [], []
+        per_layer: Dict[str, list] = {}
         for j in range(period):
             x, st, aux, mets = apply_layer(
                 layer_params[j],
@@ -342,10 +366,15 @@ def apply_stack(
             new_states.append(st)
             auxes.append(aux)
             if "max_vio" in mets:
-                vios.append(mets["max_vio"])
+                for k, v in mets.items():
+                    per_layer.setdefault(k, []).append(v)
         aux_total = sum(auxes) if auxes else jnp.zeros((), jnp.float32)
-        vio_vec = jnp.stack(vios) if vios else jnp.zeros((0,), jnp.float32)
-        return x, new_states, aux_total, vio_vec
+        stacked = (
+            {k: jnp.stack(v) for k, v in per_layer.items()}
+            if per_layer
+            else {"max_vio": jnp.zeros((0,), jnp.float32)}
+        )
+        return x, new_states, aux_total, stacked
 
     # full groups via scan
     if n_groups > 0:
@@ -370,23 +399,23 @@ def apply_stack(
         def scan_body(x, per_group):
             lp, ls = per_group[0], per_group[1]
             gk = per_group[2] if group_keys is not None else None
-            x, new_states, aux, vio = body_fn(x, lp, ls, gk)
-            return x, (new_states, aux, vio)
+            x, new_states, aux, lmets = body_fn(x, lp, ls, gk)
+            return x, (new_states, aux, lmets)
 
         xs = (full_params, full_states)
         if group_keys is not None:
             xs = xs + (group_keys,)
-        x, (scanned_states, auxes, vios) = lax.scan(scan_body, x, xs)
+        x, (scanned_states, auxes, met_groups) = lax.scan(scan_body, x, xs)
         aux_total = jnp.sum(auxes)
-        vio_groups = vios  # (n_groups, n_moe_in_period)
+        # met_groups[k]: (n_groups, n_moe_in_period, ...) stacked by the scan
     else:
         scanned_states = [None] * period
         aux_total = jnp.zeros((), jnp.float32)
-        vio_groups = jnp.zeros((0, 0), jnp.float32)
+        met_groups = {"max_vio": jnp.zeros((0, 0), jnp.float32)}
 
     # remainder layers (tail prefix of the period), applied once
     rem_states = []
-    rem_vios = []
+    rem_mets: list = []
     if remainder:
         lp = [
             jax.tree.map(lambda a: a[n_groups], params["blocks"][j])
@@ -417,7 +446,7 @@ def apply_stack(
             rem_states.append(st)
             aux_total = aux_total + aux
             if "max_vio" in mets:
-                rem_vios.append(mets["max_vio"])
+                rem_mets.append(mets)
 
     # reassemble router-state stacks
     new_router_states = []
@@ -433,17 +462,22 @@ def apply_stack(
             )
         new_router_states.append(base)
 
-    # per-layer MaxVio in true layer order
+    # per-layer metric columns in true layer order (group-major reassembly,
+    # matching how the scan visits layers); every key the layers emitted
+    # becomes '<key>_per_layer' with a leading (n_moe_layers,) axis
     moe_positions = [j for j in range(period) if kinds[j][1] == "moe"]
-    vio_list = []
-    if n_groups > 0 and len(moe_positions):
-        for g in range(n_groups):
-            for i, _ in enumerate(moe_positions):
-                vio_list.append(vio_groups[g, i])
-    vio_list.extend(rem_vios)
-    metrics = {
-        "max_vio_per_layer": jnp.stack(vio_list)
-        if vio_list
-        else jnp.zeros((0,), jnp.float32)
-    }
+    keys = list(rem_mets[0]) if rem_mets else list(met_groups)
+    metrics: Dict[str, jnp.ndarray] = {}
+    for k in keys:
+        vals = []
+        if n_groups > 0 and len(moe_positions) and k in met_groups:
+            for g in range(n_groups):
+                for i, _ in enumerate(moe_positions):
+                    vals.append(met_groups[k][g, i])
+        vals.extend(m[k] for m in rem_mets)
+        metrics[f"{k}_per_layer"] = (
+            jnp.stack(vals) if vals else jnp.zeros((0,), jnp.float32)
+        )
+    if "max_vio_per_layer" not in metrics:
+        metrics["max_vio_per_layer"] = jnp.zeros((0,), jnp.float32)
     return x, new_router_states, aux_total, metrics

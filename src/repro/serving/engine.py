@@ -22,6 +22,8 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serving.scheduler import DECODE, PREFILL, Request, Scheduler
+from repro.telemetry.slo import ServingTelemetry
+from repro.telemetry.trace import Profiler, trace_span
 
 
 class ContinuousBatchingEngine:
@@ -45,6 +47,9 @@ class ContinuousBatchingEngine:
         shed_on_full: bool = False,
         step_delay: float = 0.0,
         clock=time.perf_counter,
+        sink=None,
+        profile=None,
+        profile_dir: str = "profile",
     ):
         cfg = model.cfg
         if (
@@ -125,16 +130,52 @@ class ContinuousBatchingEngine:
 
         self._serve_step = jax.jit(serve_step)
 
-        # telemetry (read by benchmarks/serve_throughput.py)
-        self.n_steps = 0
-        self.prefill_tokens = 0
-        self.decode_tokens = 0
-        self.expert_load = np.zeros(
-            (cfg.routing.n_experts if cfg.is_moe else 1,), np.float64
+        # telemetry: counters, per-expert load, and SLO histograms live in
+        # one reset-able ServingTelemetry; `sink` streams per-request
+        # lifecycle records + the final summary (telemetry/slo.py). The
+        # legacy counter attributes below are read-only views.
+        self.telemetry = ServingTelemetry(
+            cfg.routing.n_experts if cfg.is_moe else 1, sink=sink
         )
-        self.max_vio_per_step: List[float] = []
-        self.n_deadline_missed = 0  # finish_reason 'deadline' or 'expired'
-        self.n_shed = 0             # finish_reason 'shed' or 'timeout'
+        # `profile` = (lo, hi) serve-step window captured with jax.profiler
+        self._profiler = (
+            Profiler(profile, log_dir=profile_dir) if profile is not None else None
+        )
+
+    # ------------------------------------------- legacy telemetry views
+
+    @property
+    def n_steps(self) -> int:
+        return self.telemetry.n_steps
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self.telemetry.prefill_tokens
+
+    @property
+    def decode_tokens(self) -> int:
+        return self.telemetry.decode_tokens
+
+    @property
+    def expert_load(self) -> np.ndarray:
+        return self.telemetry.expert_load
+
+    @property
+    def max_vio_per_step(self) -> List[float]:
+        return self.telemetry.max_vio_per_step
+
+    @property
+    def n_deadline_missed(self) -> int:
+        return self.telemetry.n_deadline_missed
+
+    @property
+    def n_shed(self) -> int:
+        return self.telemetry.n_shed
+
+    def close(self) -> None:
+        """Stop an in-flight profiler capture (sink closing is the caller's)."""
+        if self._profiler is not None:
+            self._profiler.close()
 
     # -------------------------------------------------------------- intake
 
@@ -170,13 +211,11 @@ class ContinuousBatchingEngine:
 
     # ---------------------------------------------------------------- step
 
-    def _account_drops(self, reqs: List[Request]) -> List[Request]:
-        for r in reqs:
-            if r.finish_reason in ("deadline", "expired"):
-                self.n_deadline_missed += 1
-            elif r.finish_reason in ("shed", "timeout"):
-                self.n_shed += 1
-        return reqs
+    def _observe(self, req: Request) -> Request:
+        """Route every request outcome (finish OR drop) through telemetry
+        exactly once: counters, SLO histograms, and the per-request record."""
+        self.telemetry.on_finish(req, len(req.output))
+        return req
 
     def step(self) -> List[Request]:
         """One fused serve step. Returns requests completed this step —
@@ -184,12 +223,15 @@ class ContinuousBatchingEngine:
         submit, so every request's outcome is reported exactly once."""
         if self.step_delay > 0:
             time.sleep(self.step_delay)  # slow_step fault injection
+        if self._profiler is not None:
+            self._profiler.step(self.telemetry.n_steps)
         now = self.clock()
         # sweep BEFORE admission: evicting overdue slots frees them for
         # waiting work within the same step
-        dropped = self._account_drops(
-            self.scheduler.expire(now) + self.scheduler.take_dropped()
-        )
+        dropped = [
+            self._observe(r)
+            for r in self.scheduler.expire(now) + self.scheduler.take_dropped()
+        ]
         for slot_idx, _req in self.scheduler.admit(now):
             self.cache = self._reset(self.cache, jnp.asarray(slot_idx))
 
@@ -212,18 +254,22 @@ class ContinuousBatchingEngine:
             return dropped
 
         self._rng, sub = jax.random.split(self._rng)
-        nxt, self.cache, self.router_states, mets = self._serve_step(
-            self.params,
-            self.cache,
-            self.router_states,
-            jnp.asarray(tokens),
-            jnp.asarray(lengths),
-            sub,
+        with trace_span("serve/step"):
+            nxt, self.cache, self.router_states, mets = self._serve_step(
+                self.params,
+                self.cache,
+                self.router_states,
+                jnp.asarray(tokens),
+                jnp.asarray(lengths),
+                sub,
+            )
+            nxt = np.asarray(nxt)
+        self.telemetry.on_step(
+            mets,
+            n_prefill=sum(n for _, _, kind, n in plan if kind == PREFILL),
+            n_decode=sum(1 for _, _, kind, _ in plan if kind == DECODE),
+            queue_depth=len(self.scheduler.waiting),
         )
-        nxt = np.asarray(nxt)
-        self.n_steps += 1
-        self.expert_load += np.asarray(mets["moe_load"], np.float64)
-        self.max_vio_per_step.append(float(mets["max_vio"]))
 
         done: List[Request] = dropped
         now = self.clock()
@@ -231,24 +277,23 @@ class ContinuousBatchingEngine:
             req = slot.request
             if kind == PREFILL:
                 slot.n_prefilled += n_tok
-                self.prefill_tokens += n_tok
                 if not slot.prompt_done:
                     continue  # still mid-prompt: this step's sample is unused
                 req.phase = DECODE
                 req.t_first_token = now
-            else:
-                self.decode_tokens += 1
             # the step that finishes the prompt doubles as the first decode:
             # its last-position logits sample the first generated token
             tok = int(nxt[i])
             req.output.append(tok)
             eos = req.eos_id if req.eos_id is not None else self.eos_id
             if eos is not None and not req.ignore_eos and tok == eos:
-                done.append(self.scheduler.finish(i, "eos", now))
+                done.append(self._observe(self.scheduler.finish(i, "eos", now)))
             elif len(req.output) >= req.max_new_tokens:
-                done.append(self.scheduler.finish(i, "max_new_tokens", now))
+                done.append(
+                    self._observe(self.scheduler.finish(i, "max_new_tokens", now))
+                )
             elif slot.pos >= self.max_seq_len:
-                done.append(self.scheduler.finish(i, "length", now))
+                done.append(self._observe(self.scheduler.finish(i, "length", now)))
         return done
 
     # ----------------------------------------------------------------- run

@@ -1,0 +1,257 @@
+"""Metrics plane: in-graph MetricStream + host-side drain (TrainTelemetry).
+
+The contract (DESIGN.md §Observability):
+
+* **In-graph accumulation, zero added syncs.** `MetricStream.accumulate`
+  scatters this step's metric values into a ring buffer row
+  (`slot = step % flush_every`) inside the jit'd train step. The buffer is
+  an ordinary extra argument/output of the compiled step — it is NOT
+  donated (the host keeps in-flight async copies of drained windows alive),
+  and every value written is one the step already computed, so the
+  instrumented program differs from the bare one only by the scatters.
+  The train loop already blocks on `mets['loss']` each step; telemetry
+  introduces no additional `block_until_ready`.
+
+* **Asynchronous drain.** Every `flush_every` steps the host snapshots the
+  device buffer with `copy_to_host_async()` and swaps in the zero template;
+  the snapshot is only materialized (np.asarray → sink records) one window
+  later (or at `finish()`), by which point the copy has long completed under
+  the subsequent steps' compute.
+
+* **Integer load histograms.** Per-expert load keys must arrive as integer
+  counts (`LOAD_HIST_KEYS`); `MetricStream.build` asserts it. This is the
+  bit-stability contract of the dtype audit: a count histogram psum'd
+  across shards in int32 is exact, so local/global sync and any shard
+  topology produce identical telemetry.
+
+Rollback interaction: a guard rollback replays steps, so a window drained
+before the rollback may contain rows for steps that are later re-emitted.
+Replay is deterministic (bit-identical to the skip-in-place run), so
+duplicates agree; `metrics_report` dedups by step keeping the last record.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sinks import Sink
+from .trace import named_span
+
+# per-expert load histogram keys: integer counts end-to-end (no float
+# round-trip) — the telemetry dtype-audit contract
+LOAD_HIST_KEYS = ("load", "moe_load", "load_per_layer")
+
+# per-metric element cap: anything larger than this is not a metric but an
+# activation that leaked into the mets dict — refuse to buffer it
+MAX_METRIC_ELEMS = 65536
+
+
+def _is_load_key(name: str) -> bool:
+    return name in LOAD_HIST_KEYS
+
+
+class MetricStream:
+    """Layout + in-graph ops for the (flush_every, ...) metric ring buffer."""
+
+    def __init__(self, layout: Dict[str, Tuple[tuple, Any]], flush_every: int):
+        assert flush_every >= 1
+        self.layout = layout
+        self.flush_every = int(flush_every)
+
+    @classmethod
+    def build(cls, mets_shapes: Dict[str, Any], flush_every: int) -> "MetricStream":
+        """Derive the buffer layout from a mets pytree of ShapeDtypeStructs
+        (from `jax.eval_shape` on the un-instrumented step) or live arrays."""
+        layout: Dict[str, Tuple[tuple, Any]] = {}
+        for name in sorted(mets_shapes):
+            v = mets_shapes[name]
+            shape, dtype = tuple(v.shape), jnp.dtype(v.dtype)
+            if not (
+                jnp.issubdtype(dtype, jnp.number) or dtype == jnp.bool_
+            ):
+                continue
+            if int(np.prod(shape, dtype=np.int64)) > MAX_METRIC_ELEMS:
+                continue
+            if dtype == jnp.bool_:
+                dtype = jnp.dtype(jnp.int32)
+            if _is_load_key(name):
+                assert jnp.issubdtype(dtype, jnp.integer), (
+                    f"load histogram {name!r} must be integer counts "
+                    f"end-to-end (got {dtype}); see LOAD_HIST_KEYS"
+                )
+            layout[name] = (shape, dtype)
+        return cls(layout, flush_every)
+
+    def init_buffer(self) -> Dict[str, jnp.ndarray]:
+        buf = {
+            k: jnp.zeros((self.flush_every,) + shape, dtype)
+            for k, (shape, dtype) in self.layout.items()
+        }
+        # slot occupancy marker: -1 = never written (skipped on drain)
+        buf["_step"] = jnp.full((self.flush_every,), -1, jnp.int32)
+        return buf
+
+    def accumulate(
+        self,
+        buf: Dict[str, jnp.ndarray],
+        mets: Dict[str, jnp.ndarray],
+        step_idx: jnp.ndarray,
+    ) -> Dict[str, jnp.ndarray]:
+        """Scatter this step's metrics into the ring row (traced, jit-safe)."""
+        with named_span("telemetry/accumulate"):
+            slot = jnp.mod(step_idx, self.flush_every)
+            new = dict(buf)
+            for k, (_, dtype) in self.layout.items():
+                new[k] = buf[k].at[slot].set(mets[k].astype(dtype))
+            new["_step"] = buf["_step"].at[slot].set(step_idx.astype(jnp.int32))
+        return new
+
+
+class TrainTelemetry:
+    """Host driver: owns the stream, the device buffer, and the async drain.
+
+    Usage (train_loop wires this):
+        tel = TrainTelemetry(sink, flush_every=10)
+        tel.ensure_built(jax.eval_shape(step, ...)[1])   # mets structs
+        ...
+        state, mets, buf = step_fn(state, batch, tel.buf, step_idx)
+        tel.note_step_time(i, dt)
+        tel.after_step(i, buf)     # drains when the window closes
+        ...
+        tel.finish()               # partial window + remaining pendings
+    """
+
+    def __init__(
+        self,
+        sink: Optional[Sink] = None,
+        flush_every: int = 10,
+        run_meta: Optional[Dict[str, Any]] = None,
+        profiler=None,
+    ):
+        self.sink = sink
+        self.profiler = profiler  # optional trace.Profiler ([N, M] windowed)
+        self.flush_every = int(flush_every)
+        self.stream: Optional[MetricStream] = None
+        self.buf: Optional[Dict[str, jnp.ndarray]] = None
+        self._buf0: Optional[Dict[str, jnp.ndarray]] = None
+        self._pending: List[Dict[str, jnp.ndarray]] = []
+        self._step_times: Dict[int, float] = {}
+        self.n_records = 0
+        if run_meta is not None and sink is not None:
+            sink.emit({"kind": "run_meta", **run_meta})
+
+    @property
+    def built(self) -> bool:
+        return self.stream is not None
+
+    def ensure_built(self, mets_shapes: Dict[str, Any]) -> None:
+        if self.stream is None:
+            self.stream = MetricStream.build(mets_shapes, self.flush_every)
+            self._buf0 = self.stream.init_buffer()
+            self.buf = self._buf0
+
+    def before_step(self, step: int) -> None:
+        """Pre-step hook: drives the profiler's capture window."""
+        if self.profiler is not None:
+            self.profiler.step(step)
+
+    def note_step_time(self, step: int, dt: float) -> None:
+        self._step_times[step] = dt
+
+    def after_step(self, step: int, buf: Dict[str, jnp.ndarray]) -> None:
+        """Adopt the step's returned buffer; drain at window boundaries."""
+        self.buf = buf
+        if (step + 1) % self.flush_every == 0:
+            self._start_drain()
+
+    def event(self, record: Dict[str, Any]) -> None:
+        """Emit a guard/fault/lifecycle event record immediately."""
+        if self.sink is not None:
+            rec = dict(record)
+            rec.setdefault("kind", "event")
+            self.sink.emit(rec)
+
+    def _start_drain(self) -> None:
+        if self.buf is None or self.buf is self._buf0:
+            return
+        snap = self.buf
+        for v in snap.values():
+            try:
+                v.copy_to_host_async()
+            except AttributeError:
+                pass  # np arrays under eager/test harnesses
+        self._pending.append(snap)
+        self.buf = self._buf0
+        # materialize older snapshots only — the newest keeps overlapping
+        # with the next window's compute
+        while len(self._pending) > 1:
+            self._materialize(self._pending.pop(0))
+
+    def _materialize(self, snap: Dict[str, jnp.ndarray]) -> None:
+        host = {k: np.asarray(v) for k, v in snap.items()}
+        steps = host.pop("_step")
+        for j in np.argsort(steps, kind="stable"):
+            s = int(steps[j])
+            if s < 0:
+                continue  # never-written slot of a partial window
+            rec: Dict[str, Any] = {"kind": "train_step", "step": s}
+            dt = self._step_times.pop(s, None)
+            if dt is not None:
+                rec["step_time"] = dt
+            for k, col in host.items():
+                rec[k] = col[j]
+            self.n_records += 1
+            if self.sink is not None:
+                self.sink.emit(rec)
+
+    def finish(self) -> None:
+        """Drain the partial window and every outstanding snapshot."""
+        self._start_drain()
+        while self._pending:
+            self._materialize(self._pending.pop(0))
+        if self.profiler is not None:
+            self.profiler.close()
+
+
+class MetricSeries:
+    """Append-only host-side column store (backs TrainLog's list views).
+
+    Columns are created on first sight and back-padded with None so every
+    column always has one entry per appended record; `truncate` supports
+    the rollback rewind.
+    """
+
+    def __init__(self):
+        self._cols: Dict[str, List[Any]] = {}
+        self._n = 0
+
+    def append(self, record: Dict[str, Any]) -> None:
+        for k in self._cols:
+            self._cols[k].append(record.get(k))
+        for k, v in record.items():
+            if k not in self._cols:
+                self._cols[k] = [None] * self._n + [v]
+        self._n += 1
+
+    def column(self, name: str) -> List[Any]:
+        return self._cols.get(name, [])
+
+    def truncate(self, n: int) -> None:
+        n = max(0, int(n))
+        for k in self._cols:
+            self._cols[k] = self._cols[k][:n]
+        self._n = min(self._n, n)
+
+    def __len__(self) -> int:
+        return self._n
+
+
+__all__ = [
+    "LOAD_HIST_KEYS",
+    "MetricSeries",
+    "MetricStream",
+    "TrainTelemetry",
+]

@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.metrics import BalanceTracker
 from repro.models.model import Model
 from repro.optim import adamw as _adamw
+from repro.telemetry.metrics import MetricSeries, TrainTelemetry
 
 
 @jax.tree_util.register_dataclass
@@ -89,12 +90,20 @@ def _reduce_micro_mets(mets: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
     """Collapse (k, ...)-stacked per-microbatch metrics to per-step values.
 
     MaxVio is reduced with max (the conservative per-step number: the worst
-    microbatch — matches SupMaxVio semantics); scalars average; perplexity is
-    recomputed from the averaged CE so it stays exp(mean nll)."""
+    microbatch — matches SupMaxVio semantics); dispatch counts SUM (the
+    step's total per-expert load, keeping integer dtype); state-magnitude
+    telemetry (dual |q|, forecaster error) takes the LAST microbatch — the
+    carried state after the step, matching what a ckpt would hold; scalars
+    average; perplexity is recomputed from the averaged CE so it stays
+    exp(mean nll)."""
     out = {}
     for name, v in mets.items():
         if name == "max_vio_per_layer":
             out[name] = jnp.max(v, axis=0)
+        elif name == "load_per_layer":
+            out[name] = jnp.sum(v, axis=0)
+        elif name in ("q_abs_max_per_layer", "forecast_err_per_layer"):
+            out[name] = v[-1]
         elif name != "perplexity":
             out[name] = jnp.mean(v, axis=0)
     if "ce_loss" in out:
@@ -154,15 +163,17 @@ def make_train_step(
                 loss = loss * nan_coef
             return loss, aux
 
-        return jax.value_and_grad(f, has_aux=True)(params)
+        with jax.named_scope("train/fwd_bwd"):
+            return jax.value_and_grad(f, has_aux=True)(params)
 
     def _apply(state: TrainState, grads, new_router, mets, lr_scale=None):
         lr = lr_fn(state.opt_state["step"].astype(jnp.float32))
         if lr_scale is not None:
             lr = lr * lr_scale
-        new_params, new_opt, info = _adamw.adamw_update(
-            grads, state.opt_state, state.params, lr, opt_cfg
-        )
+        with jax.named_scope("train/apply"):
+            new_params, new_opt, info = _adamw.adamw_update(
+                grads, state.opt_state, state.params, lr, opt_cfg
+            )
         mets = dict(mets)
         mets.update(info)
         return (
@@ -256,6 +267,7 @@ def compile_train_step(
     b_specs=None,
     rng: Optional[jnp.ndarray] = None,
     guarded: bool = False,
+    telemetry: Optional[TrainTelemetry] = None,
 ):
     """jit the train step, with explicit shardings when a mesh is given.
 
@@ -270,11 +282,35 @@ def compile_train_step(
 
     `guarded=True` compiles the 3-arg guarded step (see make_train_step);
     the control vector is replicated on a mesh.
+
+    `telemetry` (a TrainTelemetry) instruments the step: the metric layout
+    is derived via `jax.eval_shape` on the UN-instrumented step, and the
+    compiled signature gains two trailing args — the in-graph MetricStream
+    buffer and the step index — returning (state, mets, buffer). The
+    buffer is NOT donated (the host holds async copies of drained windows)
+    and is replicated on a mesh; every scattered value is one the step
+    already computed, so instrumentation adds no collectives and no syncs.
     """
     step = make_train_step(
         model, opt_cfg, lr_fn, microbatches=microbatches, rng=rng, guarded=guarded
     )
     donate_argnums = (0,) if donate else ()
+
+    raw_step = step
+    if telemetry is not None:
+        eval_args = (state, batch)
+        if guarded:
+            eval_args = eval_args + (jax.ShapeDtypeStruct((3,), jnp.float32),)
+        _, mets_shapes = jax.eval_shape(raw_step, *eval_args)
+        telemetry.ensure_built(mets_shapes)
+        stream = telemetry.stream
+
+        def step(*args):
+            *inner, buf, step_idx = args
+            new_state, mets = raw_step(*inner)
+            buf = stream.accumulate(buf, mets, step_idx)
+            return new_state, mets, buf
+
     if mesh is None:
         return jax.jit(step, donate_argnums=donate_argnums)
 
@@ -291,43 +327,66 @@ def compile_train_step(
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
     )
+    repl = NamedSharding(mesh, PartitionSpec())
     in_shardings = (as_sharding(st_specs), as_sharding(b_specs))
     if guarded:
-        in_shardings = in_shardings + (NamedSharding(mesh, PartitionSpec()),)
+        in_shardings = in_shardings + (repl,)
+    out_shardings = (as_sharding(st_specs), None)
+    if telemetry is not None:
+        buf_shardings = jax.tree.map(lambda _: repl, telemetry.buf)
+        in_shardings = in_shardings + (buf_shardings, repl)
+        out_shardings = out_shardings + (buf_shardings,)
     return jax.jit(
         step,
         in_shardings=in_shardings,
-        out_shardings=(as_sharding(st_specs), None),
+        out_shardings=out_shardings,
         donate_argnums=donate_argnums,
     )
 
 
-@dataclasses.dataclass
 class TrainLog:
-    """Host-side record of one run, including the paper's balance metrics."""
+    """Host-side record of one run, including the paper's balance metrics.
 
-    losses: List[float] = dataclasses.field(default_factory=list)
-    perplexities: List[float] = dataclasses.field(default_factory=list)
-    step_times: List[float] = dataclasses.field(default_factory=list)
-    max_vio_steps: List[np.ndarray] = dataclasses.field(default_factory=list)
-    per_layer: List[BalanceTracker] = dataclasses.field(default_factory=list)
-    model_tracker: BalanceTracker = dataclasses.field(default_factory=BalanceTracker)
-    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    Backed by one `telemetry.MetricSeries` column store instead of the
+    historical parallel lists; `losses` / `perplexities` / `step_times` /
+    `max_vio_steps` survive as read-only views so every existing caller
+    (tests, benchmarks, launchers) keeps working unchanged. `events` stays
+    a plain settable list — the guard ladder assigns it wholesale.
+    """
+
+    def __init__(self) -> None:
+        self.series = MetricSeries()
+        self.per_layer: List[BalanceTracker] = []
+        self.model_tracker: BalanceTracker = BalanceTracker()
+        self.events: List[Dict[str, Any]] = []
+
+    def __len__(self) -> int:
+        return len(self.series)
+
+    @property
+    def losses(self) -> List[float]:
+        return list(self.series.column("ce_loss"))
+
+    @property
+    def perplexities(self) -> List[float]:
+        return list(self.series.column("perplexity"))
+
+    @property
+    def step_times(self) -> List[float]:
+        return list(self.series.column("step_time"))
+
+    @property
+    def max_vio_steps(self) -> List[np.ndarray]:
+        return [v for v in self.series.column("max_vio") if v is not None]
 
     def truncate(self, n: int) -> None:
         """Drop records past the first `n` steps and rebuild the balance
         trackers from the survivors — a rollback rewinds the log so replayed
         steps are not double-counted in AvgMaxVio/SupMaxVio."""
-        n = max(0, n)
-        self.losses = self.losses[:n]
-        self.perplexities = self.perplexities[:n]
-        self.step_times = self.step_times[:n]
-        self.max_vio_steps = self.max_vio_steps[:n]
+        self.series.truncate(max(0, n))
         self.per_layer = []
         self.model_tracker = BalanceTracker()
-        kept, self.max_vio_steps = self.max_vio_steps, []
-        for vios in kept:
-            self.max_vio_steps.append(vios)
+        for vios in self.max_vio_steps:
             if not self.per_layer:
                 self.per_layer = [BalanceTracker() for _ in range(vios.size)]
             for t, v in zip(self.per_layer, vios):
@@ -335,28 +394,39 @@ class TrainLog:
             self.model_tracker.add(float(vios.max()))
 
     def record(self, mets: Dict[str, Any], dt: float) -> None:
-        self.losses.append(float(mets["ce_loss"]))
-        self.perplexities.append(float(mets["perplexity"]))
-        self.step_times.append(dt)
+        rec: Dict[str, Any] = {
+            "ce_loss": float(mets["ce_loss"]),
+            "perplexity": float(mets["perplexity"]),
+            "step_time": dt,
+        }
         vios = np.asarray(mets.get("max_vio_per_layer", np.zeros(0)))
         if vios.size:
-            self.max_vio_steps.append(vios)
+            rec["max_vio"] = vios
             if not self.per_layer:
                 self.per_layer = [BalanceTracker() for _ in range(vios.size)]
             for t, v in zip(self.per_layer, vios):
                 t.add(float(v))
             # model-level MaxVio for the batch = max over layers (conservative)
             self.model_tracker.add(float(vios.max()))
+        self.series.append(rec)
 
     def summary(self) -> Dict[str, Any]:
+        times = self.step_times
         out = {
-            "final_loss": self.losses[-1] if self.losses else None,
-            "final_ppl": self.perplexities[-1] if self.perplexities else None,
-            "mean_step_time": float(np.mean(self.step_times[2:]))
-            if len(self.step_times) > 2
-            else None,
+            "final_loss": self.losses[-1] if len(self.series) else None,
+            "final_ppl": self.perplexities[-1] if len(self.series) else None,
+            "mean_step_time": None,
+            "step_time_p50": None,
+            "step_time_p99": None,
             **self.model_tracker.summary(),
         }
+        if len(times) > 2:
+            # skip the first two steps (compile + warm caches) so the
+            # quantiles describe steady-state throughput
+            steady = np.asarray(times[2:], dtype=np.float64)
+            out["mean_step_time"] = float(steady.mean())
+            out["step_time_p50"] = float(np.percentile(steady, 50))
+            out["step_time_p99"] = float(np.percentile(steady, 99))
         if self.per_layer:
             out["AvgMaxVio_per_layer"] = [t.avg_max_vio for t in self.per_layer]
         if self.events:
@@ -384,6 +454,7 @@ def train_loop(
     async_ckpt: bool = True,
     guard=None,
     faults=None,
+    telemetry: Optional[TrainTelemetry] = None,
 ) -> Tuple[TrainState, TrainLog]:
     """Host driver. With `mesh` the state/batches are placed with the specs
     from `distributed.sharding` and the step compiles with explicit
@@ -423,6 +494,12 @@ def train_loop(
     * SIGTERM (preemption) triggers one final SYNCHRONOUS checkpoint and a
       clean return — installed only on the main thread and restored on
       exit.
+
+    `telemetry` (a `telemetry.TrainTelemetry`) threads the in-graph metric
+    buffer through the compiled step, records per-step wall time, drains
+    windows asynchronously to the sink, and streams guard/fault/lifecycle
+    events as they happen. The partial final window is flushed in the
+    `finally` block; closing the sink is the caller's job.
     """
     from repro.optim.schedules import linear_warmup_cosine
 
@@ -494,6 +571,17 @@ def train_loop(
     mesh_ctx = mesh if mesh is not None else contextlib.nullcontext()
     saved_at = -1
 
+    emitted = {"n": 0}
+
+    def _stream_events() -> None:
+        # forward newly appended guard-ladder events to the telemetry sink
+        # exactly once each, in order
+        if telemetry is None or tguard is None:
+            return
+        while emitted["n"] < len(tguard.events):
+            telemetry.event(dict(tguard.events[emitted["n"]]))
+            emitted["n"] += 1
+
     def _save(block: bool) -> Optional[str]:
         path = manager.save_train_state(
             state,
@@ -503,9 +591,10 @@ def train_loop(
         if faults is not None and faults.get("ckpt_corrupt") is not None:
             manager.wait()  # the file must be fully written before corrupting
             if faults.corrupt_after_save(path):
-                log.events.append(
-                    {"step": i, "kind": "ckpt_corrupted", "path": path}
-                )
+                ev = {"step": i, "kind": "ckpt_corrupted", "path": path}
+                log.events.append(ev)
+                if telemetry is not None:
+                    telemetry.event(ev)
         return path
 
     try:
@@ -545,26 +634,39 @@ def train_loop(
                     b_specs=b_specs,
                     rng=jax.random.fold_in(key, 0x5eed),
                     guarded=bool(guarded),
+                    telemetry=telemetry,
                 )
+            if telemetry is not None:
+                telemetry.before_step(i)  # profiler window, if configured
             t0 = time.perf_counter()
+            step_args = (state, batch)
             if guarded:
                 force_skip, lr_scale = tguard.controls(i)
                 inject = faults is not None and faults.nan_fires(i)
                 controls = jnp.asarray(
                     [float(inject), float(force_skip), lr_scale], jnp.float32
                 )
+                step_args = step_args + (controls,)
+            if telemetry is not None:
+                step_args = step_args + (telemetry.buf, jnp.asarray(i, jnp.int32))
                 with mesh_ctx:
-                    state, mets = step_fn(state, batch, controls)
+                    state, mets, tbuf = step_fn(*step_args)
             else:
                 with mesh_ctx:
-                    state, mets = step_fn(state, batch)
+                    state, mets = step_fn(*step_args)
             jax.block_until_ready(mets["loss"])
             dt = time.perf_counter() - t0
+            if telemetry is not None:
+                telemetry.note_step_time(i, dt)
+                # adopt before guard observation so an anomalous step's row
+                # is captured even when the guard rolls back past it
+                telemetry.after_step(i, tbuf)
             if guarded:
                 action = tguard.observe(  # raises TrainingDiverged on RAISE
                     i, float(mets["loss"]), bool(mets["step_ok"])
                 )
                 log.events = tguard.events
+                _stream_events()
                 if action == ROLLBACK:
                     r_step, state = manager.restore_train_state()
                     ds = manager.restore_data_state(r_step)
@@ -583,6 +685,11 @@ def train_loop(
                         state = shard_tree(state, st_specs, mesh)
                     log.truncate(r_step - loop_start)
                     log.events = tguard.events
+                    _stream_events()
+                    if telemetry is not None:
+                        telemetry.event(
+                            {"step": i, "kind": "rollback_replay", "to_step": r_step}
+                        )
                     start_step = 0  # a fallback restore may predate `resume`
                     i = r_step - 1
                     if log_every:
@@ -606,11 +713,16 @@ def train_loop(
                 # preemption: make the state durable NOW, synchronously
                 _save(block=True)
                 saved_at = i
-                log.events.append({"step": i, "kind": "sigterm_checkpoint"})
+                ev = {"step": i, "kind": "sigterm_checkpoint"}
+                log.events.append(ev)
+                if telemetry is not None:
+                    telemetry.event(ev)
                 break
         if manager is not None and ckpt_every and saved_at != i:
             _save(block=not async_ckpt)  # final state, off-boundary stop
     finally:
+        if telemetry is not None:
+            telemetry.finish()  # partial window + outstanding async copies
         if hook_signal:
             _signal.signal(_signal.SIGTERM, prev_handler)
         if manager is not None:
