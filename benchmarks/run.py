@@ -12,6 +12,7 @@ Benchmarks:
   kernel microbench (ADMM iteration + expert GEMM)      -> below
   dispatch plan old-vs-new + Pallas FFN                 -> benchmarks.moe_dispatch
   streaming data pipeline (tokens/s, prefetch overlap)  -> benchmarks.data_pipeline
+  serving throughput + multi-tenant offered-load sweep  -> benchmarks.serve_throughput
   roofline table (if dry-run results exist)             -> benchmarks.roofline
 """
 from __future__ import annotations
@@ -162,6 +163,21 @@ def _bench_telemetry_overhead(args) -> None:
     _rows(telemetry_overhead.run(smoke=not args.full))
 
 
+def _bench_serve_throughput(args) -> None:
+    if args.skip_train:
+        return
+    print("# serving throughput (prefill speedup + multi-tenant sweep)", flush=True)
+    from benchmarks import serve_throughput
+
+    # the mesh rows ride along when forced host devices are available
+    # (CI exports XLA_FLAGS=--xla_force_host_platform_device_count=8);
+    # otherwise the bench prints a skip row and sweeps unsharded only
+    argv = ["--out-json", "BENCH_serve_throughput.json", "--mesh", "4x2"]
+    if not args.full:
+        argv += ["--smoke", "--requests", "16", "--sweep-requests", "12"]
+    serve_throughput.main(argv)
+
+
 def _bench_roofline(args) -> None:
     if os.path.exists("dryrun_results_single.jsonl"):
         print("# roofline (from dry-run artifacts)", flush=True)
@@ -183,6 +199,7 @@ BENCHES = {
     "capacity_ablation": _bench_capacity_ablation,
     "expert_choice": _bench_expert_choice,
     "telemetry_overhead": _bench_telemetry_overhead,
+    "serve_throughput": _bench_serve_throughput,
     "roofline": _bench_roofline,
 }
 

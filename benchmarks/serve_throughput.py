@@ -20,6 +20,18 @@ Two measurements (DESIGN.md §Serving):
    rate and shed/timeout count ride along in the output, so "how gracefully
    does it fail" is benchmarked next to "how fast does it go".
 
+3. Bursty multi-tenant sweep: requests arrive in Poisson BURSTS (compound
+   Poisson — burst epochs are exponential, burst sizes geometric), each
+   from one of a few tenants with Zipf-skewed popularity. A tenant draws
+   its prompt tokens from its own vocabulary slice — tenant skew is topic
+   skew, the serving analogue of the real-text routing-skew sweep — and
+   its own prompt/output length profile (short chat vs long documents, so
+   packed prefill and spreading both engage). The sweep runs the SAME
+   streams at several offered loads through an unsharded engine and (with
+   ``--mesh DxM``) an expert-parallel mesh engine, reporting p50/p99 TTFT
+   and inter-token latency vs offered load, tokens/s/device, and the
+   per-expert MaxVio under live traffic through the SLO plane.
+
 Prints ``name,us_per_call,derived`` CSV lines per the repo contract;
 ``--out-json`` additionally writes the BENCH_serve_throughput record.
 """
@@ -30,6 +42,105 @@ import json
 import time
 
 import numpy as np
+
+
+# ------------------------------------------------- multi-tenant generator
+
+
+def make_multitenant_stream(
+    seed: int,
+    vocab_size: int,
+    n_requests: int,
+    rate: float,
+    max_prompt: int,
+    max_gen: int,
+    n_tenants: int = 4,
+    burst_mean: float = 3.0,
+):
+    """Compound-Poisson bursty arrivals from Zipf-popular tenants.
+
+    Returns [(t_arrival, tenant, prompt ndarray, n_gen)] sorted by time.
+    `rate` is the OFFERED LOAD in requests/s: burst epochs are Poisson at
+    rate/burst_mean and each burst carries Geometric(1/burst_mean) requests
+    back-to-back, so the long-run request rate is `rate` but arrivals
+    cluster — the regime where queue depth, TTFT tails, and routing skew
+    actually separate schedulers. Tenant t draws prompt tokens from its own
+    slice of the vocabulary (topic skew -> routing skew) and has its own
+    length profile: even tenants are "chat" (short prompts, short outputs),
+    odd tenants are "document" (long prompts that exercise packed prefill
+    spreading, longer outputs)."""
+    rng = np.random.default_rng(seed)
+    # Zipf tenant popularity: tenant 0 dominates the stream
+    pop = 1.0 / np.arange(1, n_tenants + 1)
+    pop = pop / pop.sum()
+    slice_w = vocab_size // n_tenants
+    out = []
+    t = 0.0
+    while len(out) < n_requests:
+        t += rng.exponential(burst_mean / rate)  # burst epoch
+        size = 1 + rng.geometric(1.0 / burst_mean)
+        for _ in range(min(size, n_requests - len(out))):
+            tenant = int(rng.choice(n_tenants, p=pop))
+            if tenant % 2 == 0:  # chat profile
+                plen = int(rng.integers(4, max(max_prompt // 4, 5)))
+                gen = int(rng.integers(4, max_gen + 1))
+            else:  # document profile
+                plen = int(rng.integers(max_prompt // 2, max_prompt + 1))
+                gen = int(rng.integers(2, max(max_gen // 2, 3)))
+            lo = tenant * slice_w
+            prompt = rng.integers(lo, lo + slice_w, (plen,))
+            out.append((t, tenant, prompt, gen))
+    return out
+
+
+def _drive(eng, stream, n_devices: int = 1):
+    """Replay an arrival-stamped stream through an engine; returns the
+    measured-phase summary (SLO quantiles, throughput, expert balance)."""
+    # warm both traced programs outside the timed phase: a short prompt
+    # compiles the legacy step, a lone long prompt (> chunk, idle rows to
+    # spread into) compiles the packed-prefill step
+    wlen = max(len(p) for _, _, p, _ in stream)
+    for toks in ([1, 2, 3], [1] * wlen):
+        warm = eng.submit(toks, 2, ignore_eos=True)
+        assert warm is not None
+        eng.run()
+    eng.telemetry.reset()
+
+    t0 = time.perf_counter()
+    pending = list(stream)
+    n_done = 0
+    while pending or eng.scheduler.has_work:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            a, _tenant, p, g = pending[0]
+            if eng.submit(p, g, ignore_eos=True, arrival_time=a) is None:
+                break  # backpressure: queue full, keep stepping
+            pending.pop(0)
+        if eng.scheduler.has_work:
+            n_done += len(eng.step())
+        elif pending:
+            time.sleep(min(0.001, max(pending[0][0] - now, 0.0)))
+    wall = time.perf_counter() - t0
+
+    slo = eng.telemetry.summary()
+    tp = eng.telemetry.throughput(wall, n_devices)
+    load = eng.expert_load
+    mean = max(load.mean(), 1e-9)
+    return {
+        "n_completed": n_done,
+        "n_steps": eng.n_steps,
+        "wall_s": wall,
+        "tokens_per_s": tp["tokens_per_s"],
+        "tokens_per_s_per_device": tp["tokens_per_s_per_device"],
+        "n_devices": n_devices,
+        "ttft_p50": slo["ttft"]["p50"],
+        "ttft_p99": slo["ttft"]["p99"],
+        "itl_p50": slo["itl"]["p50"],
+        "itl_p99": slo["itl"]["p99"],
+        "queue_depth_max": slo["queue_depth_max"],
+        "expert_maxvio": float(load.max() / mean - 1.0),
+        "expert_load": [float(x) for x in load],
+    }
 
 
 def _per_token_prefill_tps(model, params, prompts, max_seq_len) -> float:
@@ -104,6 +215,17 @@ def main(argv=None):
     ap.add_argument("--shed-on-full", action="store_true",
                     help="shed oldest waiting request instead of refusing "
                          "new submissions under backpressure")
+    # bursty multi-tenant sweep knobs
+    ap.add_argument("--rates", default="50,200",
+                    help="comma-separated offered loads (req/s) for the "
+                         "multi-tenant sweep")
+    ap.add_argument("--sweep-requests", type=int, default=24,
+                    help="requests per sweep point (smoke uses fewer)")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="also sweep an expert-parallel engine on a "
+                         "(data D x model M) host mesh; run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--out-json", default=None,
                     help="write the BENCH_serve_throughput record here")
     ap.add_argument("--smoke", action="store_true",
@@ -211,6 +333,61 @@ def main(argv=None):
         print(f"serve_expert_maxvio,,{maxvio:.3f}")
         print("serve_expert_load,," + "|".join(f"{x:.0f}" for x in load))
 
+    # ---- 3. bursty multi-tenant offered-load sweep ---------------------
+    # One engine per placement, reused across rates (the jit caches live on
+    # the engine); each point replays a fresh arrival-stamped stream.
+    rates = [float(r) for r in args.rates.split(",") if r]
+    n_sweep = max(args.sweep_requests // 2, 6) if args.smoke else args.sweep_requests
+    engines = [("local", eng, 1)]
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        if jax.device_count() < d * m:
+            print(
+                f"serve_sweep_mesh_skipped,,need {d * m} devices, have "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={d * m})"
+            )
+            args.mesh = None
+    if args.mesh:
+        mesh = make_host_mesh(d, m)
+        eng_mesh = ContinuousBatchingEngine(
+            model,
+            params,
+            n_slots=args.n_slots,
+            chunk_size=args.chunk,
+            max_seq_len=args.max_seq_len,
+            seed=args.seed,
+            mesh=mesh,
+        )
+        engines.append((f"ep{d}x{m}", eng_mesh, mesh.size))
+
+    sweep = []
+    for rate in rates:
+        stream = make_multitenant_stream(
+            args.seed,
+            cfg.vocab_size,
+            n_sweep,
+            rate,
+            max_prompt=args.prompt_len,
+            max_gen=args.gen,
+            n_tenants=args.tenants,
+        )
+        for name, e, n_dev in engines:
+            res = _drive(e, stream, n_dev)
+            sweep.append({"config": name, "rate": rate, **res})
+            print(
+                f"serve_sweep_{name}_r{rate:g},"
+                f"{1e6 / max(res['tokens_per_s'], 1e-9):.2f},"
+                f"ttft p50 {1e3 * res['ttft_p50']:.1f}/p99 "
+                f"{1e3 * res['ttft_p99']:.1f} ms, itl p50 "
+                f"{1e3 * res['itl_p50']:.2f}/p99 {1e3 * res['itl_p99']:.2f} ms, "
+                f"{res['tokens_per_s_per_device']:.0f} tok/s/dev, "
+                f"maxvio {res['expert_maxvio']:.3f}"
+            )
+
     if args.out_json:
         record = {
             "bench": "serve_throughput",
@@ -241,6 +418,13 @@ def main(argv=None):
             "queue_wait": slo["queue_wait"],
             "queue_depth_max": slo["queue_depth_max"],
             "queue_depth_mean": slo["queue_depth_mean"],
+            # bursty multi-tenant offered-load sweep (docstring §3):
+            # p50/p99 TTFT + ITL vs rate, tokens/s/device, live MaxVio,
+            # for the unsharded engine and (with --mesh) the EP engine
+            "mesh": args.mesh,
+            "tenants": args.tenants,
+            "sweep_requests": n_sweep,
+            "sweep": sweep,
         }
         with open(args.out_json, "w") as f:
             json.dump(record, f, indent=2)

@@ -9,16 +9,23 @@ batches (tokens / labels [/ segments]) through tokenize -> shuffle-buffer
   Every rank scans the same shard list (document striding, not file
   striding, so any W partitions any corpus evenly) and the per-rank stream
   is a pure function of (shards, seed, rank, world_size).
-* **Checkpointable cursor** — `state_dict()` captures the full stream
-  state: (epoch, file index, byte offset, document counter), the
-  shuffle-buffer RNG *and contents*, the packer's pending tail, and
-  already-packed-but-unbatched windows. `load_state_dict()` seeks straight
-  to the byte offset, so `train_loop(resume=True)` restarts bit-exactly in
-  O(1) — no replay of the consumed prefix.
+* **Checkpointable cursor** — `state_dict()` is an *offset-replay* cursor:
+  it records the stream position (epoch, file index, byte offset, document
+  counter), the RNG and packer state as of the start of the current
+  shuffle block, and two counters (documents drained from the block,
+  packed windows already consumed into emitted batches). It never
+  serializes buffered document *contents*: `load_state_dict()` seeks to
+  the block anchor and re-reads at most one block, re-deriving the buffer
+  membership from the replayed RNG. The cursor size is therefore O(1) in
+  `shuffle_buffer` — O(batch_size · seq_len) for the packer tail and the
+  sub-batch pending windows — so it stays sidecar-sized at production
+  buffer sizes.
 
-The whole state is JSON-serializable (ints, lists, the PCG64 state dict),
-sized by shuffle_buffer ≈ buffered documents — it rides in a sidecar file
-next to the TrainState npz (checkpoint/store.py).
+Shuffling is *block* shuffling: read `shuffle_buffer` documents, permute
+them with the stream RNG, drain them to the packer, repeat. Within-block
+order is uniform; mixing across blocks comes from epoch reseeding. The
+whole state is JSON-serializable (ints, lists, the PCG64 state dict) and
+rides in a sidecar file next to the TrainState npz (checkpoint/store.py).
 """
 from __future__ import annotations
 
@@ -126,12 +133,20 @@ class ShardedTextLoader:
         self._byte_offset = 0
         self._doc_count = 0  # global (all-rank) doc counter within the epoch
         self._rng = np.random.default_rng(self._epoch_seed(0))
-        self._buffer: List[List[int]] = []  # tokenized docs awaiting shuffle-pop
         self._packer = SequencePacker(seq_len, tokenizer.eos_id, pack_mode)
         self._pending: List[Dict[str, np.ndarray]] = []  # packed windows
         self._batches_emitted = 0
         self._exhausted = False
         self._fh = None
+        # block-shuffle replay state: `_block` holds the not-yet-drained
+        # remainder of the current permuted block (reversed: pop() = next);
+        # `_anchor` snapshots everything needed to replay the block from
+        # the stream, so the cursor never stores document contents
+        self._block: List[List[int]] = []
+        self._drained = 0            # docs of the current block already packed
+        self._windows_consumed = 0   # windows emitted into batches since anchor
+        self._flushed_since_anchor = False
+        self._anchor = self._make_anchor()
 
     # ----------------------------------------------------------- reading
 
@@ -215,20 +230,50 @@ class ShardedTextLoader:
 
     # ----------------------------------------------------------- batching
 
-    def _pump(self) -> bool:
-        """Advance the pipeline one document; False when fully exhausted."""
-        if not self._exhausted:
+    def _make_anchor(self) -> Dict:
+        """Snapshot of everything a restore needs to replay the current
+        block: stream position, RNG, packer tail, and the pending windows
+        left over from previous blocks. All O(1) in `shuffle_buffer`."""
+        return {
+            "epoch": self._epoch,
+            "file_idx": self._file_idx,
+            "byte_offset": self._byte_offset,
+            "doc_count": self._doc_count,
+            "rng_state": self._rng.bit_generator.state,
+            "packer": self._packer.state_dict(),
+            "pending": list(self._pending),  # window dicts are immutable
+        }
+
+    def _read_block(self) -> List[List[int]]:
+        """Read up to `shuffle_buffer` documents and permute them with the
+        stream RNG. Called both live (from `_pump`) and during replay, so
+        the permutation is a pure function of the anchor state."""
+        docs: List[List[int]] = []
+        while len(docs) < self.shuffle_buffer:
             doc = self._next_rank_doc()
             if doc is None:
                 self._exhausted = True
-            else:
-                self._buffer.append(doc)
-                if len(self._buffer) < self.shuffle_buffer:
-                    return True
-        if not self._buffer:
-            return False
-        pick = int(self._rng.integers(len(self._buffer)))
-        self._pending.extend(self._packer.add_document(self._buffer.pop(pick)))
+                break
+            docs.append(doc)
+        order = self._rng.permutation(len(docs)) if docs else []
+        return [docs[i] for i in order]
+
+    def _pump(self) -> bool:
+        """Advance the pipeline one document; False when fully exhausted."""
+        if not self._block:
+            if self._exhausted:
+                return False
+            # new block: re-anchor the replay cursor BEFORE reading, then
+            # read + permute (reversed so pop() yields permuted order)
+            self._drained = 0
+            self._windows_consumed = 0
+            self._flushed_since_anchor = False
+            self._anchor = self._make_anchor()
+            self._block = self._read_block()[::-1]
+            if not self._block:
+                return False
+        self._drained += 1
+        self._pending.extend(self._packer.add_document(self._block.pop()))
         return True
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
@@ -237,60 +282,113 @@ class ShardedTextLoader:
                 if not self._pump():
                     break
             if len(self._pending) < self.batch_size and self._exhausted:
-                if not self._buffer:
+                if not self._block:
                     self._pending.extend(self._packer.flush())
+                    self._flushed_since_anchor = True
                 if len(self._pending) < self.batch_size:
                     return  # drop the ragged remainder: batch shape is static
             batch = examples_to_batch(self._pending[: self.batch_size])
             self._pending = self._pending[self.batch_size :]
+            self._windows_consumed += self.batch_size
             self._batches_emitted += 1
             yield batch
 
     # -------------------------------------------------------------- state
 
-    def state_dict(self) -> Dict:
-        return {
-            "version": 1,
-            "epoch": self._epoch,
-            "file_idx": self._file_idx,
-            "byte_offset": self._byte_offset,
-            "doc_count": self._doc_count,
-            "rng_state": self._rng.bit_generator.state,
-            "buffer": [list(d) for d in self._buffer],
-            "packer": self._packer.state_dict(),
-            "pending": [
-                {k: np.asarray(v).tolist() for k, v in ex.items()}
-                for ex in self._pending
-            ],
-            "batches_emitted": self._batches_emitted,
-            "exhausted": self._exhausted,
-            "io_retries": self._n_io_retries,
-            "skipped_lines": self._n_skipped_lines,
-        }
+    @staticmethod
+    def _windows_to_json(windows) -> List[Dict]:
+        return [
+            {k: np.asarray(v).tolist() for k, v in ex.items()} for ex in windows
+        ]
 
-    def load_state_dict(self, state: Dict) -> None:
-        assert state.get("version") == 1, state.get("version")
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
-        self._epoch = int(state["epoch"])
-        self._file_idx = int(state["file_idx"])
-        self._byte_offset = int(state["byte_offset"])
-        self._doc_count = int(state["doc_count"])
-        self._rng = np.random.default_rng(0)
-        self._rng.bit_generator.state = state["rng_state"]
-        self._buffer = [list(map(int, d)) for d in state["buffer"]]
-        self._packer.load_state_dict(state["packer"])
-        self._pending = [
+    @staticmethod
+    def _windows_from_json(windows) -> List[Dict[str, np.ndarray]]:
+        return [
             {
                 k: np.asarray(v, bool if k == "valid" else np.int32)
                 for k, v in ex.items()
             }
-            for ex in state["pending"]
+            for ex in windows
         ]
+
+    def state_dict(self) -> Dict:
+        return {
+            "version": 2,
+            # current read position: diagnostics + mid-shard visibility
+            "epoch": self._epoch,
+            "file_idx": self._file_idx,
+            "byte_offset": self._byte_offset,
+            "doc_count": self._doc_count,
+            "batches_emitted": self._batches_emitted,
+            "exhausted": self._exhausted,
+            "io_retries": self._n_io_retries,
+            "skipped_lines": self._n_skipped_lines,
+            # offset-replay cursor: block anchor + consumed-prefix counters;
+            # restore re-reads the block instead of storing its contents
+            "anchor": {
+                "epoch": self._anchor["epoch"],
+                "file_idx": self._anchor["file_idx"],
+                "byte_offset": self._anchor["byte_offset"],
+                "doc_count": self._anchor["doc_count"],
+                "rng_state": self._anchor["rng_state"],
+                "packer": self._anchor["packer"],
+                "pending": self._windows_to_json(self._anchor["pending"]),
+            },
+            "drained": self._drained,
+            "windows_consumed": self._windows_consumed,
+            "flushed": self._flushed_since_anchor,
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        assert state.get("version") == 2, state.get("version")
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        a = state["anchor"]
+        self._epoch = int(a["epoch"])
+        self._file_idx = int(a["file_idx"])
+        self._byte_offset = int(a["byte_offset"])
+        self._doc_count = int(a["doc_count"])
+        self._rng = np.random.default_rng(0)
+        self._rng.bit_generator.state = a["rng_state"]
+        self._packer.load_state_dict(a["packer"])
+        self._pending = self._windows_from_json(a["pending"])
+        self._exhausted = False
+        self._block = []
+        drained = int(state["drained"])
+        # replay: re-read the in-flight block from the anchor (re-deriving
+        # buffer membership from the replayed RNG), re-feed the consumed
+        # document prefix through the packer, drop already-emitted windows
+        if drained > 0:
+            permuted = self._read_block()
+            for doc in permuted[:drained]:
+                self._pending.extend(self._packer.add_document(doc))
+            self._block = permuted[drained:][::-1]
+        if bool(state.get("flushed", False)):
+            self._pending.extend(self._packer.flush())
+        wc = int(state["windows_consumed"])
+        self._pending = self._pending[wc:]
+        self._anchor = {
+            "epoch": int(a["epoch"]),
+            "file_idx": int(a["file_idx"]),
+            "byte_offset": int(a["byte_offset"]),
+            "doc_count": int(a["doc_count"]),
+            "rng_state": a["rng_state"],
+            "packer": dict(a["packer"]),
+            "pending": self._windows_from_json(a["pending"]),
+        }
+        self._drained = drained
+        self._windows_consumed = wc
+        self._flushed_since_anchor = bool(state.get("flushed", False))
+        # the replayed read must land exactly where the snapshot was taken
+        assert (
+            self._epoch == int(state["epoch"])
+            and self._file_idx == int(state["file_idx"])
+            and self._byte_offset == int(state["byte_offset"])
+            and self._doc_count == int(state["doc_count"])
+        ), "cursor replay diverged from the snapshotted stream position"
         self._batches_emitted = int(state["batches_emitted"])
         self._exhausted = bool(state["exhausted"])
-        # .get: counters were added after version 1 shipped; absent = 0
         self._n_io_retries = int(state.get("io_retries", 0))
         self._n_skipped_lines = int(state.get("skipped_lines", 0))
         self._io_streak = 0

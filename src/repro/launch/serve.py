@@ -25,6 +25,10 @@ def main(argv=None):
     ap.add_argument("--max-seq-len", type=int, default=0, help="0 = auto")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a (data D x model M) device mesh: params/"
+                         "cache take the training shardings and MoE layers "
+                         "run the expert-parallel dispatch paths")
     # robustness flags (DESIGN.md §Robustness)
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request latency budget; overdue requests are "
@@ -71,6 +75,14 @@ def main(argv=None):
         step_delay = faults.step_delay()
         print("injecting: " + "; ".join(f.describe() for f in faults.faults))
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_host_mesh(d, m)
+        print(f"serving on a {d}x{m} mesh ({mesh.size} devices)")
+
     from repro.telemetry import open_sink, profile_window
 
     sink = open_sink(args.telemetry)
@@ -91,6 +103,7 @@ def main(argv=None):
         step_delay=step_delay,
         sink=sink,
         profile=profile_window(args.profile) if args.profile else None,
+        mesh=mesh,
     )
     rng = np.random.default_rng(0)
     reqs = []

@@ -231,6 +231,10 @@ def attention_chunk(
     *,
     layer_kind: str = "global",
     lengths: jnp.ndarray = None,  # (B,) int32, tokens valid per row (0..C)
+    positions: Optional[jnp.ndarray] = None,  # (B, C) packed-mode positions
+    segments: Optional[jnp.ndarray] = None,  # (B, C) ids; -1 = padding
+    write_slots: Optional[jnp.ndarray] = None,  # (B, C) target cache row; -1 drops
+    cache_rows: Optional[jnp.ndarray] = None,  # (B,) cache row each row reads
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Cached attention advancing each row by `lengths[i]` tokens at once.
 
@@ -248,7 +252,24 @@ def attention_chunk(
 
     For local layers C <= window_size is required (asserted; the engine
     clamps chunk_size), so in-chunk writes never collide in the ring.
+
+    Passing `segments` switches to the PACKED layout (see
+    `_attention_chunk_packed`); `lengths` is ignored there and the other
+    three packed operands describe per-column placement. The segments=None
+    path is bit-identical to the pre-packing implementation.
     """
+    if segments is not None:
+        return _attention_chunk_packed(
+            params,
+            x,
+            cache,
+            cfg,
+            layer_kind=layer_kind,
+            positions=positions,
+            segments=segments,
+            write_slots=write_slots,
+            cache_rows=cache_rows,
+        )
     b, c, _ = x.shape
     theta = cfg.rope_theta
     window = 0
@@ -321,6 +342,130 @@ def attention_chunk(
     y = _attend(q, k_att, v_att, mask, cfg.attn_logit_softcap, cfg.compute_dtype)
     out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(cfg.compute_dtype))
     return out, {"k": k, "v": v, "pos": pos0 + lengths}
+
+
+def _attention_chunk_packed(
+    params: Params,
+    x: jnp.ndarray,  # (B, C, d)
+    cache: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    layer_kind: str,
+    positions: jnp.ndarray,  # (B, C) absolute position of every column
+    segments: jnp.ndarray,  # (B, C) int32; -1 = padding
+    write_slots: jnp.ndarray,  # (B, C) cache row each column writes; -1 drops
+    cache_rows: Optional[jnp.ndarray],  # (B,) cache row each ROW reads
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Packed multi-request chunk: row != slot, column placement is explicit.
+
+    Each column carries (position, segment, target cache row). Segment 0 is
+    the row's RESIDENT stream — the continuation of cache row
+    `cache_rows[b]` — and attends through the cache exactly like the dense
+    path. Segments >= 1 are FRESH packed prompts: whole short prompts
+    sharing a row, attending only their own in-chunk keys (same row, same
+    segment, causal by position) — their K/V still scatter into their own
+    slot's cache row via `write_slots` so the next step continues them as
+    residents. Segment -1 columns are padding: never written, never
+    attended, outputs garbage (same caller-masks contract as the dense
+    path).
+
+    Cross-row placement of ONE stream (a long prompt spread over several
+    rows as segment 0 with a shared cache row) is sound only on GLOBAL
+    layers, where write-then-attend routes every in-flight key through the
+    cache; ring layers see in-chunk keys per-row only, so the engine gates
+    spreading on all-global stacks.
+    """
+    b, c, _ = x.shape
+    n_rows, cap = cache["k"].shape[0], cache["k"].shape[1]
+    theta = cfg.rope_theta
+    window = 0
+    if layer_kind == "local":
+        window = cfg.window_size
+        if cfg.rope_local_theta:
+            theta = cfg.rope_local_theta
+    if cache_rows is None:
+        cache_rows = jnp.arange(b, dtype=jnp.int32)
+    valid = segments >= 0  # (B, C)
+    q_pos = positions
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cfg.compute_dtype))
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cfg.compute_dtype))
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cfg.compute_dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.rms_norm_eps)
+        k_new = rmsnorm(params["k_norm"], k_new, cfg.rms_norm_eps)
+    q = apply_rope(q, q_pos, theta)
+    k_new = apply_rope(k_new, q_pos, theta)
+
+    if window > 0:
+        assert c <= cap, f"chunk {c} must fit the ring buffer (window {cap})"
+        write_pos = q_pos % cap
+    else:
+        write_pos = q_pos
+    # dropped columns (padding, or write_slots < 0) scatter out of bounds
+    drop = ~valid | (write_slots < 0)
+    ws = jnp.where(drop, n_rows, write_slots)
+    wp = jnp.where(drop, cap, write_pos)
+    k = cache["k"].at[ws, wp].set(k_new.astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[ws, wp].set(v_new.astype(cache["v"].dtype), mode="drop")
+
+    resident = segments == 0  # cache-attached columns
+    fresh = segments >= 1  # in-chunk packed prompts
+    same_seg = segments[:, None, :] == segments[:, :, None]  # (B, C, C)
+    idx = jnp.arange(cap)[None, :]  # (1, cap)
+    pos0 = cache["pos"]
+    if window > 0:
+        # pre-update ring of the row's resident stream (same rationale as
+        # the dense path); fresh segments never touch it
+        prev = pos0[cache_rows] - 1  # (B,)
+        k_pos = prev[:, None] - ((prev[:, None] - idx) % cap)  # (B, cap)
+        ring_ok = (
+            (k_pos >= 0)[:, None, :]
+            & (k_pos[:, None, :] <= q_pos[..., None])
+            & (k_pos[:, None, :] > q_pos[..., None] - window)
+            & resident[..., None]
+        )  # (B, C, cap)
+        chunk_ok = (
+            same_seg
+            & (q_pos[:, None, :] <= q_pos[..., None])
+            & (q_pos[:, None, :] > q_pos[..., None] - window)
+            & valid[:, None, :]
+        )  # (B, C, C)
+        mask = jnp.concatenate([ring_ok, chunk_ok], axis=-1) & valid[..., None]
+        k_att = jnp.concatenate(
+            [cache["k"][cache_rows].astype(cfg.compute_dtype), k_new], axis=1
+        )
+        v_att = jnp.concatenate(
+            [cache["v"][cache_rows].astype(cfg.compute_dtype), v_new], axis=1
+        )
+    else:
+        # write-then-attend through the POST-update cache row: residents see
+        # every key of their stream regardless of which row wrote it this
+        # chunk (that is what makes cross-row spreading exact); fresh
+        # segments attend their in-chunk keys only — their cache writes
+        # land in a row this row does not read
+        k_pos = jnp.broadcast_to(idx, (b, cap))
+        cache_ok = (k_pos[:, None, :] <= q_pos[..., None]) & resident[..., None]
+        chunk_ok = (
+            same_seg
+            & (q_pos[:, None, :] <= q_pos[..., None])
+            & valid[:, None, :]
+            & fresh[..., None]
+        )
+        mask = jnp.concatenate([cache_ok, chunk_ok], axis=-1) & valid[..., None]
+        k_att = jnp.concatenate([k[cache_rows], k_new], axis=1)
+        v_att = jnp.concatenate(
+            [v[cache_rows].astype(cfg.compute_dtype), v_new], axis=1
+        )
+    mask = mask[:, None]  # (B, 1, C, cap+C)
+
+    y = _attend(q, k_att, v_att, mask, cfg.attn_logit_softcap, cfg.compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(cfg.compute_dtype))
+    # each cache row advances by the number of valid columns written into it
+    counts = jnp.zeros((n_rows,), jnp.int32).at[ws.reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.int32), mode="drop"
+    )
+    return out, {"k": k, "v": v, "pos": pos0 + counts}
 
 
 def init_attention_cache(

@@ -304,20 +304,26 @@ class Model:
         return {"blocks": caches}
 
     def _apply_layer_chunk(
-        self, p, x, cfg, mixer_kind, ffn_kind, cache, router_state, lengths
+        self, p, x, cfg, mixer_kind, ffn_kind, cache, router_state, lengths,
+        packed=None,
     ):
         """One layer over a (B, C) token chunk against the slot cache.
 
         `lengths` is (B,) valid-token counts, or None meaning every column is
         real (the decode_step / dryrun path — keeps the MoE dispatch
-        unmasked and therefore expert-parallel safe). Returns
+        unmasked and therefore expert-parallel safe). `packed` (a dict of
+        positions/segments/write_slots/cache_rows) switches attention into
+        the packed multi-request layout; column validity then comes from
+        segments >= 0. Returns
         (x, new_cache, new_router_state, aux, load) with load the per-expert
         dispatch counts of this layer's real tokens ((m,) or None).
         """
         base = mixer_kind.replace("+shared", "")
         new_cache = dict(cache)
         valid = None
-        if lengths is not None:
+        if packed is not None:
+            valid = packed["segments"] >= 0  # (B, C)
+        elif lengths is not None:
             valid = jnp.arange(x.shape[1])[None, :] < lengths[:, None]  # (B, C)
         if base in ("global", "local"):
             h, attn_cache = common.attention_chunk(
@@ -327,6 +333,7 @@ class Model:
                 cfg,
                 layer_kind=base,
                 lengths=lengths,
+                **(packed or {}),
             )
             new_cache.update(attn_cache)
             x = x + stack._maybe_post(p, "post_attn_norm", h, cfg)
@@ -393,6 +400,7 @@ class Model:
                 cfg,
                 layer_kind="global",
                 lengths=lengths,
+                **(packed or {}),
             )
             new_cache.update({"sk": sc["k"], "sv": sc["v"], "spos": sc["pos"]})
             x = x + h
@@ -409,6 +417,11 @@ class Model:
         cache: Params,
         router_states: list,
         lengths: Optional[jnp.ndarray] = None,  # (B,) valid counts; None = all C
+        *,
+        positions: Optional[jnp.ndarray] = None,  # (B, C) packed-mode layout
+        segments: Optional[jnp.ndarray] = None,  # (B, C); -1 = padding
+        write_slots: Optional[jnp.ndarray] = None,  # (B, C) cache row per column
+        cache_rows: Optional[jnp.ndarray] = None,  # (B,) cache row each row reads
     ) -> Tuple[jnp.ndarray, Params, list, Dict[str, jnp.ndarray]]:
         """Advance every slot by up to C tokens in ONE fused, trace-once step.
 
@@ -422,10 +435,29 @@ class Model:
         summed over MoE layers and metrics['max_vio'] the worst per-layer
         violation. Padded logit columns are garbage; callers index
         lengths-1.
+
+        Passing `segments` switches attention into the PACKED layout
+        (common._attention_chunk_packed): rows and cache slots decouple, and
+        every column carries (position, segment, write slot). Attention-only
+        stacks only — SSM/conv state advances strictly left-to-right per row
+        and cannot host interleaved streams.
         """
         cfg = self.cfg
         period, n_groups, remainder = stack._group_layout(cfg)
         kinds = cfg.layer_kinds()
+        packed = None
+        if segments is not None:
+            bad = {k for k, _ in kinds if k.replace("+shared", "") not in ("global", "local")}
+            if bad:
+                raise ValueError(
+                    f"packed prefill: attention-only stacks required, got {sorted(bad)}"
+                )
+            packed = {
+                "positions": positions,
+                "segments": segments,
+                "write_slots": write_slots,
+                "cache_rows": cache_rows,
+            }
         self._shared_params = params["stack"].get("shared")
         x = common.embed(params["embed"], tokens, cfg)
         m_load = cfg.routing.n_experts if cfg.is_moe else 1
@@ -436,7 +468,8 @@ class Model:
             vio = jnp.zeros((), jnp.float32)
             for j in range(period):
                 x, nc, st, _, ld = self._apply_layer_chunk(
-                    lp[j], x, cfg, kinds[j][0], kinds[j][1], lc[j], ls[j], lengths
+                    lp[j], x, cfg, kinds[j][0], kinds[j][1], lc[j], ls[j], lengths,
+                    packed,
                 )
                 new_caches.append(nc)
                 new_states.append(st)
@@ -485,7 +518,8 @@ class Model:
                 else jax.tree.map(lambda a: a[n_groups], router_states[j])
             )
             x, nc, st, _, ld = self._apply_layer_chunk(
-                lp_j, x, cfg, kinds[j][0], kinds[j][1], lc_j, ls_j, lengths
+                lp_j, x, cfg, kinds[j][0], kinds[j][1], lc_j, ls_j, lengths,
+                packed,
             )
             rem_caches.append(nc)
             rem_states.append(st)

@@ -116,14 +116,11 @@ def moe_ffn(params, x, router_state, cfg, mesh_ctx, token_mask=None):
     token_mask (n,) bool marks real tokens; False rows (serving padding)
     still receive selections (static shapes) but are excluded from
     dispatch, capacity, the router-state update, and the load metrics.
-    Only the local path supports it (the serving engine is single-device
-    for now — DESIGN.md §Serving).
+    Every path supports it: the EP impls shard the mask alongside the
+    tokens and psum the real-token counts, so EP-sharded serving reports
+    the same masked load histograms as the single-device engine
+    (DESIGN.md §Serving).
     """
-    if token_mask is not None:
-        assert mesh_ctx is None or not getattr(mesh_ctx, "use_ep", False), (
-            "token_mask is only supported on the single-device path"
-        )
-        return moe_ffn_local(params, x, router_state, cfg, token_mask=token_mask)
     if mesh_ctx is not None and getattr(mesh_ctx, "use_ep", False):
         impl_name = cfg.routing.moe_impl
         if impl_name == "auto":
@@ -141,8 +138,9 @@ def moe_ffn(params, x, router_state, cfg, mesh_ctx, token_mask=None):
             mesh_ctx.mesh,
             data_axes=mesh_ctx.data_axes,
             model_axis=mesh_ctx.model_axis,
+            token_mask=token_mask,
         )
-    return moe_ffn_local(params, x, router_state, cfg)
+    return moe_ffn_local(params, x, router_state, cfg, token_mask=token_mask)
 
 
 # -------------------------------------------------- dispatch bookkeeping
@@ -265,6 +263,7 @@ def moe_ffn_ep2d(
     *,
     data_axes: Tuple[str, ...],
     model_axis: str,
+    token_mask: Optional[jnp.ndarray] = None,  # (n_global,) bool
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
     """2D expert-parallel path: gather ACTIVATIONS, never gather weights.
 
@@ -304,15 +303,22 @@ def moe_ffn_ep2d(
     wf_spec = P(model_axis, None, data_axes if f_shards > 1 else None)
     wd_spec = P(model_axis, data_axes if f_shards > 1 else None, None)
 
-    def block(x_loc, w_router, w_gate, w_up, w_down, q_state):
+    def block(x_loc, w_router, w_gate, w_up, w_down, q_state, *mask_args):
         rank = lax.axis_index(model_axis)
+        mask_loc = mask_args[0] if mask_args else None
         if token_sharded:
             x_all = lax.all_gather(x_loc, data_axes, axis=0, tiled=True)
+            mask_all = (
+                lax.all_gather(mask_loc, data_axes, axis=0, tiled=True)
+                if mask_loc is not None
+                else None
+            )
         else:
             x_all = x_loc  # already replicated
+            mask_all = mask_loc
         logits = jnp.einsum("nd,dm->nm", x_all.astype(jnp.float32), w_router)
-        out = route(logits, q_state, rcfg)
-        plan = make_dispatch_plan(out.expert_index, m, cap)
+        out = route(logits, q_state, rcfg, token_mask=mask_all)
+        plan = make_dispatch_plan(out.expert_index, m, cap, mask_all)
 
         # gather THIS rank's expert segments straight out of the sort order
         buf = plan.pack(x_all, expert_offset=rank * m_loc, n_local=m_loc)
@@ -340,7 +346,13 @@ def moe_ffn_ep2d(
         # the converged global q / forecaster EMAs) that re-establish
         # replication for check_vma
         new_state = out.state
-        load = out.metrics["load"]
+        # masked: balance over real tokens only — router_metrics counts the
+        # padded rows' placeholder selections; the plan's segment counts
+        # already exclude them (mirrors moe_ffn_local)
+        load = plan.counts if mask_all is not None else out.metrics["load"]
+        n_real = (
+            jnp.sum(mask_all.astype(jnp.int32)) if mask_all is not None else None
+        )
         dropped = out.metrics["dropped_frac_cap1"]
         aux = out.aux_loss
         if token_sharded:
@@ -351,7 +363,12 @@ def moe_ffn_ep2d(
             load = lax.psum(load, data_axes) // n_data_shards
             dropped = lax.pmean(dropped, data_axes)
             aux = lax.pmean(aux, data_axes)
-        mean_load = (n_global * k) / m
+            if n_real is not None:
+                n_real = lax.psum(n_real, data_axes) // n_data_shards
+        if n_real is not None:
+            mean_load = jnp.maximum(n_real * k / m, 1e-9)
+        else:
+            mean_load = (n_global * k) / m
         mets = {
             "load": load,
             "max_vio": jnp.max(load) / mean_load - 1.0,
@@ -359,17 +376,29 @@ def moe_ffn_ep2d(
         }
         return y_tok, new_state, aux, mets
 
+    in_specs = [
+        x_spec,
+        P(None, None),
+        wf_spec,
+        wf_spec,
+        wd_spec,
+        _state_specs(router_state),
+    ]
+    args = [
+        x,
+        params["w_router"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        router_state,
+    ]
+    if token_mask is not None:
+        in_specs.append(P(data_axes if token_sharded else None))
+        args.append(token_mask)
     fn = _shard_map(
         block,
         mesh=mesh,
-        in_specs=(
-            x_spec,
-            P(None, None),
-            wf_spec,
-            wf_spec,
-            wd_spec,
-            _state_specs(router_state),
-        ),
+        in_specs=tuple(in_specs),
         out_specs=(
             x_spec,
             _state_specs(router_state),
@@ -378,14 +407,7 @@ def moe_ffn_ep2d(
         ),
         check_vma=True,
     )
-    return fn(
-        x,
-        params["w_router"],
-        params["w_gate"],
-        params["w_up"],
-        params["w_down"],
-        router_state,
-    )
+    return fn(*args)
 
 
 def moe_ffn_ep2ds(
@@ -397,6 +419,7 @@ def moe_ffn_ep2ds(
     *,
     data_axes: Tuple[str, ...],
     model_axis: str,
+    token_mask: Optional[jnp.ndarray] = None,  # (n_global,) bool
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Selective 2D expert parallelism — gather only DISPATCHED tokens.
 
@@ -425,7 +448,7 @@ def moe_ffn_ep2ds(
     if not token_sharded:
         return moe_ffn_ep2d(
             params, x, router_state, cfg, mesh,
-            data_axes=data_axes, model_axis=model_axis,
+            data_axes=data_axes, model_axis=model_axis, token_mask=token_mask,
         )
     ep = mesh.shape[model_axis]
     assert m % ep == 0, (m, ep)
@@ -444,11 +467,12 @@ def moe_ffn_ep2ds(
     wf_spec = P(model_axis, None, data_axes if f_sharded else None)
     wd_spec = P(model_axis, data_axes if f_sharded else None, None)
 
-    def block(x_loc, w_router, w_gate, w_up, w_down, q_state):
+    def block(x_loc, w_router, w_gate, w_up, w_down, q_state, *mask_args):
         rank = lax.axis_index(model_axis)
+        mask_loc = mask_args[0] if mask_args else None
         logits = jnp.einsum("nd,dm->nm", x_loc.astype(jnp.float32), w_router)
-        out = route(logits, q_state, rcfg)
-        plan = make_dispatch_plan(out.expert_index, m, cap)
+        out = route(logits, q_state, rcfg, token_mask=mask_loc)
+        plan = make_dispatch_plan(out.expert_index, m, cap, mask_loc)
 
         buf = plan.pack(x_loc, expert_offset=rank * m_loc, n_local=m_loc)
 
@@ -484,8 +508,15 @@ def moe_ffn_ep2ds(
             new_state = dict(out.state)
             for key in get_balancer(cfg.routing.strategy).local_avg_keys:
                 new_state[key] = lax.pmean(out.state[key], data_axes)
-        load = lax.psum(out.metrics["load"], data_axes)
-        mean_load = (n_global * k) / m
+        if mask_loc is not None:
+            # per-expert counts of real tokens only (plan excludes masked
+            # rows); normalize by the psum'd real-token count
+            load = lax.psum(plan.counts, data_axes)
+            n_real = lax.psum(jnp.sum(mask_loc.astype(jnp.int32)), data_axes)
+            mean_load = jnp.maximum(n_real * k / m, 1e-9)
+        else:
+            load = lax.psum(out.metrics["load"], data_axes)
+            mean_load = (n_global * k) / m
         mets = {
             "load": load,
             "max_vio": jnp.max(load) / mean_load - 1.0,
@@ -496,17 +527,29 @@ def moe_ffn_ep2ds(
         aux = lax.pmean(out.aux_loss, data_axes)
         return y_tok, new_state, aux, mets
 
+    in_specs = [
+        P(data_axes, None),
+        P(None, None),
+        wf_spec,
+        wf_spec,
+        wd_spec,
+        _state_specs(router_state),
+    ]
+    args = [
+        x,
+        params["w_router"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        router_state,
+    ]
+    if token_mask is not None:
+        in_specs.append(P(data_axes))
+        args.append(token_mask)
     fn = _shard_map(
         block,
         mesh=mesh,
-        in_specs=(
-            P(data_axes, None),
-            P(None, None),
-            wf_spec,
-            wf_spec,
-            wd_spec,
-            _state_specs(router_state),
-        ),
+        in_specs=tuple(in_specs),
         out_specs=(
             P(data_axes, None),
             _state_specs(router_state),
@@ -515,14 +558,7 @@ def moe_ffn_ep2ds(
         ),
         check_vma=True,
     )
-    return fn(
-        x,
-        params["w_router"],
-        params["w_gate"],
-        params["w_up"],
-        params["w_down"],
-        router_state,
-    )
+    return fn(*args)
 
 
 def moe_ffn_ep(
@@ -534,6 +570,7 @@ def moe_ffn_ep(
     *,
     data_axes: Tuple[str, ...],
     model_axis: str,
+    token_mask: Optional[jnp.ndarray] = None,  # (n_global,) bool
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Expert-parallel path under shard_map (see module docstring)."""
     m = cfg.routing.n_experts
@@ -552,12 +589,13 @@ def moe_ffn_ep(
     cap = expert_capacity(n_loc, cfg)
     rcfg = router_config(cfg, data_axes=data_axes if cfg.routing.sync == "global" else ())
 
-    def block(x_loc, w_router, w_gate, w_up, w_down, q_state):
+    def block(x_loc, w_router, w_gate, w_up, w_down, q_state, *mask_args):
         # x_loc: (n_loc, d); w_gate: (m_loc, d, f); q_state: {'q': (m,)}
         rank = lax.axis_index(model_axis)
+        mask_loc = mask_args[0] if mask_args else None
         logits = jnp.einsum("nd,dm->nm", x_loc.astype(jnp.float32), w_router)
-        out = route(logits, q_state, rcfg)
-        plan = make_dispatch_plan(out.expert_index, m, cap)
+        out = route(logits, q_state, rcfg, token_mask=mask_loc)
+        plan = make_dispatch_plan(out.expert_index, m, cap, mask_loc)
 
         # pack only the slots routed to THIS rank's experts (pure gather)
         buf = plan.pack(x_loc, expert_offset=rank * m_loc, n_local=m_loc)
@@ -580,14 +618,22 @@ def moe_ffn_ep(
         else:
             new_state = out.state
         # global balance metrics: sum local loads over data shards
-        load = out.metrics["load"]
+        load = plan.counts if mask_loc is not None else out.metrics["load"]
+        n_real = (
+            jnp.sum(mask_loc.astype(jnp.int32)) if mask_loc is not None else None
+        )
         dropped = out.metrics["dropped_frac_cap1"]
         aux = out.aux_loss
         if data_axes:
             load = lax.psum(load, data_axes)
             dropped = lax.pmean(dropped, data_axes)
             aux = lax.pmean(aux, data_axes)
-        mean_load = (n_global * k) / m
+            if n_real is not None:
+                n_real = lax.psum(n_real, data_axes)
+        if n_real is not None:
+            mean_load = jnp.maximum(n_real * k / m, 1e-9)
+        else:
+            mean_load = (n_global * k) / m
         mets = {
             "load": load,
             "max_vio": jnp.max(load) / mean_load - 1.0,
@@ -595,17 +641,29 @@ def moe_ffn_ep(
         }
         return y_tok, new_state, aux, mets
 
+    in_specs = [
+        P(data_axes if data_axes else None, None),  # x
+        P(None, None),  # w_router (replicated)
+        P(model_axis, None, None),  # w_gate
+        P(model_axis, None, None),  # w_up
+        P(model_axis, None, None),  # w_down
+        _state_specs(router_state),  # router state replicated
+    ]
+    args = [
+        x,
+        params["w_router"],
+        params["w_gate"],
+        params["w_up"],
+        params["w_down"],
+        router_state,
+    ]
+    if token_mask is not None:
+        in_specs.append(P(data_axes if data_axes else None))
+        args.append(token_mask)
     f = _shard_map(
         block,
         mesh=mesh,
-        in_specs=(
-            P(data_axes if data_axes else None, None),  # x
-            P(None, None),  # w_router (replicated)
-            P(model_axis, None, None),  # w_gate
-            P(model_axis, None, None),  # w_up
-            P(model_axis, None, None),  # w_down
-            _state_specs(router_state),  # router state replicated
-        ),
+        in_specs=tuple(in_specs),
         out_specs=(
             P(data_axes if data_axes else None, None),
             _state_specs(router_state),
@@ -614,11 +672,4 @@ def moe_ffn_ep(
         ),
         check_vma=True,
     )
-    return f(
-        x,
-        params["w_router"],
-        params["w_gate"],
-        params["w_up"],
-        params["w_down"],
-        router_state,
-    )
+    return f(*args)

@@ -9,6 +9,22 @@ the whole engine runs trace-once; per-slot cache positions let sequences at
 different offsets coexist; the BIP router's dual vector q threads through
 every step, so expert loads stay balanced under mixed prefill/decode
 traffic — the paper's systems payoff at inference time.
+
+Two extensions ride on the same slot pool:
+
+* `mesh=` puts the whole engine on a device mesh: params/cache/router
+  state are laid out with the training shardings (distributed/sharding.py)
+  and both jit'd step programs carry explicit in/out shardings, so MoE
+  layers run the expert-parallel dispatch paths (ep/ep2d/ep2ds) with the
+  masked global-sync duals — serving and training share one routing
+  implementation.
+* PACKED prefill decouples batch rows from cache slots: when a prompt is
+  longer than one chunk and other rows would idle, its tail chunks spread
+  across free rows (all-global stacks: write-then-attend makes this
+  exact), and short fresh prompts tuck into other rows' padding columns as
+  extra segments to free more rows. The packed step is only dispatched
+  when it strictly reduces step count; otherwise the legacy single-layout
+  program runs unchanged.
 """
 from __future__ import annotations
 
@@ -50,6 +66,7 @@ class ContinuousBatchingEngine:
         sink=None,
         profile=None,
         profile_dir: str = "profile",
+        mesh=None,
     ):
         cfg = model.cfg
         if (
@@ -67,7 +84,14 @@ class ContinuousBatchingEngine:
             cfg = dataclasses.replace(
                 cfg, routing=dataclasses.replace(cfg.routing, use_kernel=use_kernel)
             )
-            model = build_model(cfg)
+            model = build_model(cfg, model.mesh_ctx)
+        if mesh is not None:
+            # rebuild on the mesh: moe_ffn dispatches the expert-parallel
+            # shard_map paths, attention/MLP get the training constraints
+            from repro.distributed.sharding import make_mesh_ctx
+            from repro.models import build_model
+
+            model = build_model(cfg, make_mesh_ctx(mesh))
         assert not cfg.n_enc_layers and not cfg.frontend_dim, (
             "continuous batching serves token-only families; use "
             "greedy_generate's legacy path for encdec/vlm"
@@ -111,10 +135,18 @@ class ContinuousBatchingEngine:
             shed_on_full=shed_on_full,
         )
 
+        self.mesh = mesh
         self.cache = model.init_slot_cache(params, n_slots, max_seq_len)
         self.router_states = model.init_router_states()
         self._rng = jax.random.PRNGKey(seed)
-        self._reset = jax.jit(model.reset_slot)
+
+        # packed-prefill capability gates: packing needs segment-aware
+        # attention (no SSM/conv state — it advances strictly left-to-right
+        # per row); spreading one stream across rows additionally needs the
+        # write-then-attend cache on EVERY layer (no sliding-window rings)
+        kinds = [k.replace("+shared", "") for k, _ in cfg.layer_kinds()]
+        self._can_pack = all(k in ("global", "local") for k in kinds)
+        self._can_spread = self._can_pack and all(k == "global" for k in kinds)
 
         def serve_step(params, cache, states, tokens, lengths, rng):
             logits, cache, states, mets = model.prefill_chunk(
@@ -128,7 +160,68 @@ class ContinuousBatchingEngine:
                 nxt = jnp.argmax(last, axis=-1)
             return nxt.astype(jnp.int32), cache, states, mets
 
-        self._serve_step = jax.jit(serve_step)
+        def serve_step_packed(
+            params, cache, states, tokens, positions, segments,
+            write_slots, cache_rows, gather_rows, gather_cols, rng,
+        ):
+            logits, cache, states, mets = model.prefill_chunk(
+                params, tokens, cache, states,
+                positions=positions, segments=segments,
+                write_slots=write_slots, cache_rows=cache_rows,
+            )
+            # per-SLOT sample: gather_* point at each slot's last real
+            # column in the packed grid (garbage rows are never consumed)
+            last = logits[gather_rows, gather_cols]  # (n_slots, vocab)
+            if temperature > 0.0:
+                nxt = jax.random.categorical(rng, last / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(last, axis=-1)
+            return nxt.astype(jnp.int32), cache, states, mets
+
+        if mesh is None:
+            self._reset = jax.jit(model.reset_slot)
+            self._serve_step = jax.jit(serve_step)
+            self._serve_step_packed = jax.jit(serve_step_packed)
+        else:
+            # explicit shardings: params/cache/router state keep the
+            # training layouts across every step; everything small (tokens,
+            # sampled ids, metrics) is replicated
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.distributed.sharding import (
+                cache_specs, param_specs, router_state_specs, shard_tree,
+            )
+
+            def named(specs):
+                return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+            repl = NamedSharding(mesh, P())
+            pshard = named(param_specs(params, cfg, mesh))
+            cshard = named(cache_specs(self.cache, cfg, mesh, n_slots))
+            sshard = named(router_state_specs(self.router_states))
+            mshard = {"moe_load": repl, "max_vio": repl}
+            self.params = shard_tree(params, param_specs(params, cfg, mesh), mesh)
+            self.cache = shard_tree(
+                self.cache, cache_specs(self.cache, cfg, mesh, n_slots), mesh
+            )
+            self.router_states = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), self.router_states, sshard
+            )
+            self._reset = jax.jit(
+                model.reset_slot,
+                in_shardings=(cshard, repl),
+                out_shardings=cshard,
+            )
+            self._serve_step = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, sshard, repl, repl, repl),
+                out_shardings=(repl, cshard, sshard, mshard),
+            )
+            self._serve_step_packed = jax.jit(
+                serve_step_packed,
+                in_shardings=(pshard, cshard, sshard) + (repl,) * 8,
+                out_shardings=(repl, cshard, sshard, mshard),
+            )
 
         # telemetry: counters, per-expert load, and SLO histograms live in
         # one reset-able ServingTelemetry; `sink` streams per-request
@@ -217,6 +310,134 @@ class ContinuousBatchingEngine:
         self.telemetry.on_finish(req, len(req.output))
         return req
 
+    def _plan_packed(self, active):
+        """Packed-layout step plan, or None when the legacy one-row-per-slot
+        layout is already step-optimal.
+
+        Packing pays only when some prompt has more than `chunk_size` tokens
+        left: its tail chunks can then SPREAD across rows that would
+        otherwise idle (exactness argument in
+        common._attention_chunk_packed — all-global stacks only), finishing
+        a k-chunk prefill in ceil(k / n_free_rows) steps instead of k. Short
+        fresh prompts are tucked into used rows' free columns as extra
+        segments, vacating their rows for spreading. Returns the operand
+        arrays of `serve_step_packed` plus the bookkeeping plan; falls back
+        to None whenever the resulting layout would be identical to the
+        legacy one (so steady-state decode keeps the legacy program)."""
+        b, c = self.n_slots, self.chunk_size
+        if not self._can_spread:
+            return None
+        if not any(
+            not slot.prompt_done
+            and len(slot.request.prompt) - slot.n_prefilled > c
+            for _, slot in active
+        ):
+            return None
+
+        tokens = np.zeros((b, c), np.int32)
+        positions = np.zeros((b, c), np.int32)
+        segments = np.full((b, c), -1, np.int32)
+        write_slots = np.full((b, c), -1, np.int32)
+        cache_rows = np.arange(b, dtype=np.int32)
+        gather_rows = np.zeros((b,), np.int32)
+        gather_cols = np.zeros((b,), np.int32)
+        col_used = np.zeros((b,), np.int32)
+        next_seg = np.ones((b,), np.int32)
+        row_taken = [False] * b
+        plan: List[tuple] = []
+
+        decodes, shorts, streams = [], [], []
+        for i, slot in active:
+            if slot.prompt_done:
+                decodes.append((i, slot))
+            elif slot.n_prefilled == 0 and len(slot.request.prompt) < c:
+                shorts.append((i, slot))
+            else:
+                streams.append((i, slot))
+
+        for i, slot in decodes:
+            tokens[i, 0] = slot.request.output[-1]
+            positions[i, 0] = slot.pos - 1  # == cache pos of slot i
+            segments[i, 0] = 0
+            write_slots[i, 0] = i
+            col_used[i] = 1
+            row_taken[i] = True
+            gather_rows[i], gather_cols[i] = i, 0
+            plan.append((i, slot, DECODE, 1))
+
+        # prefill streams: first chunk in the slot's own row as the resident
+        # (segment 0) continuation of its cache
+        rem: Dict[int, int] = {}
+        last_at: Dict[int, tuple] = {}
+        stream_slot = dict(streams)
+        for i, slot in streams:
+            p0 = slot.n_prefilled
+            L = min(len(slot.request.prompt) - p0, c)
+            tokens[i, :L] = slot.request.prompt[p0 : p0 + L]
+            positions[i, :L] = np.arange(p0, p0 + L)
+            segments[i, :L] = 0
+            write_slots[i, :L] = i
+            col_used[i] = L
+            row_taken[i] = True
+            rem[i] = len(slot.request.prompt) - p0 - L
+            last_at[i] = (i, L - 1, L)  # (row, col, placed-so-far)
+
+        # short fresh prompts: best-fit into a used row's padding columns as
+        # a fresh segment (frees their own row for spreading below)
+        for i, slot in sorted(
+            shorts, key=lambda t: -len(t[1].request.prompt)
+        ):
+            L = len(slot.request.prompt)
+            fit = [
+                r for r in range(b) if row_taken[r] and col_used[r] + L <= c
+            ]
+            r = min(fit, key=lambda r: c - col_used[r] - L) if fit else i
+            s = int(next_seg[r])
+            row_taken[r] = True
+            lo = col_used[r]
+            tokens[r, lo : lo + L] = slot.request.prompt
+            positions[r, lo : lo + L] = np.arange(L)
+            segments[r, lo : lo + L] = s
+            write_slots[r, lo : lo + L] = i
+            next_seg[r] = s + 1
+            col_used[r] = lo + L
+            gather_rows[i], gather_cols[i] = r, lo + L - 1
+            plan.append((i, slot, PREFILL, L))
+
+        # spread: hand free rows to the streams with the most prompt left
+        free = [r for r in range(b) if not row_taken[r]]
+        used_extra = False
+        for r in free:
+            if not rem:
+                break
+            i = max(rem, key=rem.get)
+            if rem[i] <= 0:
+                break
+            slot = stream_slot[i]
+            p0 = slot.n_prefilled + last_at[i][2]
+            L = min(rem[i], c)
+            tokens[r, :L] = slot.request.prompt[p0 : p0 + L]
+            positions[r, :L] = np.arange(p0, p0 + L)
+            segments[r, :L] = 0
+            cache_rows[r] = i  # this row CONTINUES slot i's stream
+            write_slots[r, :L] = i
+            col_used[r] = L
+            row_taken[r] = True
+            rem[i] -= L
+            last_at[i] = (r, L - 1, last_at[i][2] + L)
+            used_extra = True
+
+        if not used_extra:
+            return None  # no spreading happened: legacy layout is identical
+        for i, slot in streams:
+            r, col, placed = last_at[i]
+            gather_rows[i], gather_cols[i] = r, col
+            plan.append((i, slot, PREFILL, placed))
+        return (
+            tokens, positions, segments, write_slots, cache_rows,
+            gather_rows, gather_cols, plan,
+        )
+
     def step(self) -> List[Request]:
         """One fused serve step. Returns requests completed this step —
         including any dropped by the deadline/timeout sweep or shed at
@@ -236,34 +457,57 @@ class ContinuousBatchingEngine:
             self.cache = self._reset(self.cache, jnp.asarray(slot_idx))
 
         b, c = self.n_slots, self.chunk_size
-        tokens = np.zeros((b, c), np.int32)
-        lengths = np.zeros((b,), np.int32)
-        plan: List[tuple] = []  # (slot_idx, slot, kind, n_tokens)
-        for i, slot in self.scheduler.active():
-            req = slot.request
-            if not slot.prompt_done:
-                chunk = req.prompt[slot.n_prefilled : slot.n_prefilled + c]
-                tokens[i, : len(chunk)] = chunk
-                lengths[i] = len(chunk)
-                plan.append((i, slot, PREFILL, len(chunk)))
-            else:
-                tokens[i, 0] = req.output[-1]
-                lengths[i] = 1
-                plan.append((i, slot, DECODE, 1))
-        if not plan:
+        active = list(self.scheduler.active())
+        if not active:
             return dropped
 
+        packed = self._plan_packed(active) if self._can_pack else None
         self._rng, sub = jax.random.split(self._rng)
-        with trace_span("serve/step"):
-            nxt, self.cache, self.router_states, mets = self._serve_step(
-                self.params,
-                self.cache,
-                self.router_states,
-                jnp.asarray(tokens),
-                jnp.asarray(lengths),
-                sub,
-            )
-            nxt = np.asarray(nxt)
+        if packed is not None:
+            (tokens, positions, segments, write_slots, cache_rows,
+             gather_rows, gather_cols, plan) = packed
+            with trace_span("serve/step"):
+                nxt, self.cache, self.router_states, mets = (
+                    self._serve_step_packed(
+                        self.params,
+                        self.cache,
+                        self.router_states,
+                        jnp.asarray(tokens),
+                        jnp.asarray(positions),
+                        jnp.asarray(segments),
+                        jnp.asarray(write_slots),
+                        jnp.asarray(cache_rows),
+                        jnp.asarray(gather_rows),
+                        jnp.asarray(gather_cols),
+                        sub,
+                    )
+                )
+                nxt = np.asarray(nxt)
+        else:
+            tokens = np.zeros((b, c), np.int32)
+            lengths = np.zeros((b,), np.int32)
+            plan = []  # (slot_idx, slot, kind, n_tokens)
+            for i, slot in active:
+                req = slot.request
+                if not slot.prompt_done:
+                    chunk = req.prompt[slot.n_prefilled : slot.n_prefilled + c]
+                    tokens[i, : len(chunk)] = chunk
+                    lengths[i] = len(chunk)
+                    plan.append((i, slot, PREFILL, len(chunk)))
+                else:
+                    tokens[i, 0] = req.output[-1]
+                    lengths[i] = 1
+                    plan.append((i, slot, DECODE, 1))
+            with trace_span("serve/step"):
+                nxt, self.cache, self.router_states, mets = self._serve_step(
+                    self.params,
+                    self.cache,
+                    self.router_states,
+                    jnp.asarray(tokens),
+                    jnp.asarray(lengths),
+                    sub,
+                )
+                nxt = np.asarray(nxt)
         self.telemetry.on_step(
             mets,
             n_prefill=sum(n for _, _, kind, n in plan if kind == PREFILL),

@@ -166,6 +166,22 @@ class ServingTelemetry:
             )
 
     # -- derived views ----------------------------------------------------
+    def throughput(self, wall_s: float, n_devices: int = 1) -> Dict[str, Any]:
+        """Tokens/s views of a measured phase. The telemetry plane has no
+        wall clock or device context of its own (steps are timed by the
+        caller, the engine may or may not sit on a mesh), so both are
+        supplied here; tokens/s/device is the serving roofline axis the
+        throughput bench reports per mesh shape."""
+        total = self.prefill_tokens + self.decode_tokens
+        tps = total / wall_s if wall_s > 0 else 0.0
+        return {
+            "tokens": int(total),
+            "wall_s": float(wall_s),
+            "tokens_per_s": tps,
+            "n_devices": int(n_devices),
+            "tokens_per_s_per_device": tps / max(int(n_devices), 1),
+        }
+
     def live_max_vio(self) -> float:
         """MaxVio of the cumulative per-expert load seen so far."""
         total = self.expert_load.sum()

@@ -176,6 +176,23 @@ def test_loader_cursor_resume_mid_shard_bit_exact(shards, tok, mode):
             assert np.array_equal(r[k], x[k])
 
 
+def test_loader_cursor_size_o1_in_shuffle_buffer(shards, tok):
+    """The offset-replay cursor must not serialize buffer contents: its
+    JSON size must be flat in `shuffle_buffer` (the replay anchor stores
+    RNG + counters, not documents)."""
+    def cursor_bytes(buf):
+        l = ShardedTextLoader(
+            shards, tok, batch_size=4, seq_len=32, shuffle_buffer=buf, seed=7
+        )
+        it = iter(l)
+        for _ in range(3):
+            next(it)
+        return len(json.dumps(l.state_dict()))
+
+    small, big = cursor_bytes(4), cursor_bytes(4096)
+    assert big < 2 * small, (small, big)
+
+
 def test_loader_epochs_reshuffle(shards, tok):
     l = ShardedTextLoader(shards, tok, batch_size=4, seq_len=64, seed=0)
     first = [next(iter(l)) for _ in range(1)][0]

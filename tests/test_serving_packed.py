@@ -1,0 +1,226 @@
+"""Packed multi-request prefill (DESIGN.md §Serving).
+
+Three contracts pinned here:
+
+1. Parity: a packed chunk — several requests' segments sharing one row,
+   plus resident decode/stream rows — produces bit-identical logits and
+   cache rows to prefilling each request sequentially. NEG_INF masking
+   gives segment-foreign weights that are exactly zero, so packing is
+   exact, not approximately close.
+2. Refusal: packed operands on a stack with ssm/hybrid layers raise
+   (cross-segment state bleeds through recurrences; only attention kinds
+   can mask it out).
+3. Padding hygiene: `attention_chunk` documents that padded output
+   columns are garbage the CALLER must mask. The engine is that caller —
+   the regression test poisons every padded column (tokens and, on the
+   packed path, positions) right before the jit'd step and asserts the
+   generated streams are bit-identical to the clean engine. Any leak of
+   a padded column into attended KV state or sampled logits would diverge
+   the streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine
+
+VOCAB = 128
+
+
+def _seq_prefill(model, params, prompt, slot, n_slots, chunk, cache, st):
+    """Reference: prefill one prompt alone in its slot (legacy layout)."""
+    toks = jnp.zeros((n_slots, chunk), jnp.int32)
+    toks = toks.at[slot, : prompt.shape[0]].set(prompt)
+    lengths = jnp.zeros((n_slots,), jnp.int32).at[slot].set(prompt.shape[0])
+    lg, cache, st, _ = model.prefill_chunk(params, toks, cache, st, lengths)
+    return lg[slot, prompt.shape[0] - 1], cache, st
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "gemma2_27b"])
+def test_packed_prefill_matches_sequential(arch):
+    """Packed chunk == sequential per-request prefill, bit for bit, for
+    both the logits at each segment's last token and the written cache
+    rows — on an all-global stack and on a ring(local)+global stack."""
+    cfg = configs.reduced_for_smoke(arch, vocab_size=VOCAB)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n_slots, c, seq_len = 4, 8, 32
+
+    p0 = jnp.asarray(rng.integers(0, VOCAB, (5,)), jnp.int32)  # resident
+    p1 = jnp.asarray(rng.integers(0, VOCAB, (3,)), jnp.int32)
+    p2 = jnp.asarray(rng.integers(0, VOCAB, (4,)), jnp.int32)
+
+    # --- sequential reference: each prompt alone, then a decode on slot 0
+    st = model.init_router_states()
+    cache = model.init_slot_cache(params, n_slots, seq_len)
+    lg0, cache, st = _seq_prefill(model, params, p0, 0, n_slots, c, cache, st)
+    lg1, cache, st = _seq_prefill(model, params, p1, 1, n_slots, c, cache, st)
+    lg2, cache, st = _seq_prefill(model, params, p2, 2, n_slots, c, cache, st)
+    tok0 = jnp.argmax(lg0).astype(jnp.int32)
+    toks = jnp.zeros((n_slots, c), jnp.int32).at[0, 0].set(tok0)
+    lengths = jnp.zeros((n_slots,), jnp.int32).at[0].set(1)
+    lg_dec, cache_ref, st_ref, _ = model.prefill_chunk(
+        params, toks, cache, st, lengths
+    )
+    ref_dec = lg_dec[0, 0]
+
+    # --- packed: resident decode in row 0, p1+p2 as segments 1,2 of row 1
+    st = model.init_router_states()
+    cache = model.init_slot_cache(params, n_slots, seq_len)
+    lg0b, cache, st = _seq_prefill(model, params, p0, 0, n_slots, c, cache, st)
+    assert jnp.array_equal(lg0b, lg0)
+
+    toks = jnp.zeros((n_slots, c), jnp.int32)
+    positions = jnp.zeros((n_slots, c), jnp.int32)
+    segments = jnp.full((n_slots, c), -1, jnp.int32)
+    write_slots = jnp.full((n_slots, c), -1, jnp.int32)
+    cache_rows = jnp.arange(n_slots, dtype=jnp.int32)
+    toks = toks.at[0, 0].set(tok0)
+    positions = positions.at[0, 0].set(p0.shape[0])
+    segments = segments.at[0, 0].set(0)
+    write_slots = write_slots.at[0, 0].set(0)
+    col = 0
+    for seg, (prompt, slot) in enumerate([(p1, 1), (p2, 2)], start=1):
+        n = prompt.shape[0]
+        toks = toks.at[1, col : col + n].set(prompt)
+        positions = positions.at[1, col : col + n].set(jnp.arange(n))
+        segments = segments.at[1, col : col + n].set(seg)
+        write_slots = write_slots.at[1, col : col + n].set(slot)
+        col += n
+
+    lg_packed, cache_got, _, _ = model.prefill_chunk(
+        params, toks, cache, st,
+        positions=positions, segments=segments,
+        write_slots=write_slots, cache_rows=cache_rows,
+    )
+    assert jnp.array_equal(lg_packed[0, 0], ref_dec)
+    assert jnp.array_equal(lg_packed[1, p1.shape[0] - 1], lg1)
+    assert jnp.array_equal(lg_packed[1, col - 1], lg2)
+    # every cache row the step touched must match the sequential reference
+    for a, b in zip(jax.tree.leaves(cache_ref), jax.tree.leaves(cache_got)):
+        assert np.array_equal(np.asarray(a)[:, :3], np.asarray(b)[:, :3])
+
+
+@pytest.mark.parametrize("arch", ["mamba2_130m", "zamba2_7b"])
+def test_packed_prefill_rejects_stateful_stacks(arch):
+    """ssm/hybrid layers carry cross-token recurrent state that segment
+    masks cannot isolate; packed operands must be refused loudly."""
+    cfg = configs.reduced_for_smoke(arch, vocab_size=VOCAB)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_slots, c = 2, 8
+    cache = model.init_slot_cache(params, n_slots, 32)
+    st = model.init_router_states()
+    z2 = jnp.zeros((n_slots, c), jnp.int32)
+    with pytest.raises(ValueError, match="attention-only"):
+        model.prefill_chunk(
+            params, z2, cache, st,
+            positions=z2, segments=z2, write_slots=z2,
+            cache_rows=jnp.arange(n_slots, dtype=jnp.int32),
+        )
+
+
+def _run_stream(eng, prompts, gen=6):
+    reqs = []
+    for p in prompts:
+        r = eng.submit(p, gen, ignore_eos=True)
+        while r is None:
+            eng.step()
+            r = eng.submit(p, gen, ignore_eos=True)
+        reqs.append(r)
+    steps = 0
+    while eng.scheduler.has_work:
+        eng.step()
+        steps += 1
+    return [r.output for r in reqs], steps
+
+
+def test_engine_packed_spreading_reduces_steps():
+    """End to end: a long prompt next to idle rows finishes its prefill in
+    fewer steps through the packed path, with outputs identical to the
+    legacy one-row-per-slot schedule."""
+    cfg = configs.reduced_for_smoke("stablelm_1_6b", vocab_size=VOCAB)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, VOCAB, (23,)).tolist(),  # 3 chunks of 8
+        rng.integers(0, VOCAB, (5,)).tolist(),
+        rng.integers(0, VOCAB, (3,)).tolist(),
+    ]
+
+    eng = ContinuousBatchingEngine(
+        model, params, n_slots=6, chunk_size=8, max_seq_len=64
+    )
+    assert eng._can_spread
+    out_packed, steps_packed = _run_stream(eng, prompts)
+
+    ref = ContinuousBatchingEngine(
+        model, params, n_slots=6, chunk_size=8, max_seq_len=64
+    )
+    ref._can_spread = False  # force the legacy schedule
+    out_legacy, steps_legacy = _run_stream(ref, prompts)
+
+    assert out_packed == out_legacy
+    assert steps_packed < steps_legacy
+
+
+def _poison_padding(eng):
+    """Wrap both jit'd step programs to overwrite every padded column with
+    garbage immediately before the device call."""
+    orig_leg = eng._serve_step
+    orig_pack = eng._serve_step_packed
+
+    def leg(params, cache, states, tokens, lengths, rng):
+        pad = jnp.arange(tokens.shape[1])[None, :] >= lengths[:, None]
+        return orig_leg(
+            params, cache, states,
+            jnp.where(pad, VOCAB - 1, tokens), lengths, rng,
+        )
+
+    def pack(params, cache, states, tokens, positions, segments,
+             write_slots, cache_rows, gather_rows, gather_cols, rng):
+        pad = segments < 0
+        return orig_pack(
+            params, cache, states,
+            jnp.where(pad, VOCAB - 1, tokens),
+            jnp.where(pad, 7, positions),
+            segments, write_slots, cache_rows, gather_rows, gather_cols, rng,
+        )
+
+    eng._serve_step = leg
+    eng._serve_step_packed = pack
+
+
+@pytest.mark.parametrize("arch", ["stablelm_1_6b", "minimind_moe_16e"])
+def test_engine_masks_padded_columns(arch):
+    """The attention_chunk contract — padded output columns are garbage the
+    caller must mask — held at the engine level, on both step programs.
+
+    Garbage in padded columns (tokens AND packed-path positions) must
+    never reach a sampled token or attended KV state: if it did, the
+    poisoned engine's generated streams would diverge from the clean
+    engine's somewhere over a mixed prefill/decode schedule that exercises
+    partial chunks, packed segments, and spread rows."""
+    cfg = configs.reduced_for_smoke(arch, vocab_size=VOCAB)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [
+        rng.integers(0, VOCAB, (int(n),)).tolist() for n in (19, 5, 3, 11)
+    ]
+
+    outs = []
+    for poison in (False, True):
+        eng = ContinuousBatchingEngine(
+            model, params, n_slots=4, chunk_size=8, max_seq_len=64
+        )
+        if poison:
+            _poison_padding(eng)
+        out, _ = _run_stream(eng, prompts)
+        outs.append(out)
+    assert outs[0] == outs[1]
